@@ -1,0 +1,78 @@
+"""Shared benchmark utilities: measured CPU step times + the analytic
+cluster model (comm_model) that turns them into the paper's scaling figures.
+
+The hardware gate (GPU clusters) is simulated per the brief: per-device
+compute time is MEASURED (reduced ViT on this host, scaled by the target
+GPU's throughput ratio), synchronization is MODELED (ring all-reduce over
+the cluster interconnect), heterogeneity via per-device speed vectors.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import EngineConfig, get_smoke_config
+from repro.core.engine import DistributedEngine
+from repro.data import DATASETS, DataPipeline
+from repro.launch.mesh import make_local_mesh
+
+# paper cluster interconnects (B/s)
+ETHERNET_10G = 1.25e9          # Tesla lab cluster
+NVLINK_NODE = 5e10             # intra-node Vector
+IB_25G = 3.125e9               # inter-node Vector
+
+
+_CACHE = {}
+
+
+def vit_step_time_and_bytes(batch: int = 16, steps: int = 5):
+    """Measured wall-clock per train step of the reduced ViT on this host,
+    plus its gradient byte count (fp32) for the all-reduce model."""
+    key = ("vit", batch)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+    mesh = make_local_mesh()
+    eng = DistributedEngine(cfg, EngineConfig(train_batch_size=batch,
+                                              total_steps=100), mesh)
+    pipe = DataPipeline(kind="image", global_batch=batch,
+                        dataset=DATASETS["cifar10"],
+                        resolution=cfg.image_size)
+    params, opt = eng.init(seed=0)
+    step = eng.jit_train_step(donate=False)
+    it = iter(pipe.batches())
+    b0 = jax.tree.map(jnp.asarray, next(it))
+    with mesh:
+        step(params, opt, b0, jnp.int32(0))[2]["loss"].block_until_ready()
+        t0 = time.perf_counter()
+        for i in range(steps):
+            _, _, m = step(params, opt, b0, jnp.int32(i))
+        m["loss"].block_until_ready()
+    dt = (time.perf_counter() - t0) / steps
+    grad_bytes = 4 * cfg.param_count()
+    _CACHE[key] = (dt, grad_bytes)
+    return dt, grad_bytes
+
+
+def scale_to_gpu(cpu_time: float, batch: int, gpu_flops: float = 8.1e12,
+                 cpu_flops: float = 5e10) -> float:
+    """Translate measured CPU step time to a target GPU (default T4) via
+    peak-throughput ratio — the simulation knob documented in DESIGN.md."""
+    return cpu_time * cpu_flops / gpu_flops
+
+
+def time_fn(fn, *args, iters: int = 10, warmup: int = 2):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(rows, name, us, derived):
+    rows.append(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-path timing vs
+pure-jnp reference, plus the blockwise-attention XLA path that the dry-run
+memory numbers rest on. On CPU these are *relative* numbers; the derived
+column carries the oracle max-error (the deploy gate)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.ref import ref_attention, ref_rmsnorm, ref_wkv6
+from repro.models.blockwise import blockwise_attention_qchunked
+
+
+def bench_attention(rows):
+    key = jax.random.PRNGKey(0)
+    b, h, kh, s, d = 1, 8, 2, 1024, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kh, d))
+    v = jax.random.normal(ks[2], (b, s, kh, d))
+
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    f_ref = jax.jit(lambda a, b_, c: ref_attention(a, b_, c, causal=True))
+    t_ref = time_fn(f_ref, qT, kT, vT)
+    f_blk = jax.jit(lambda a, b_, c: blockwise_attention_qchunked(
+        a, b_, c, 0, causal=True, block_k=256, block_q=256))
+    t_blk = time_fn(f_blk, q, k, v)
+    err = float(jnp.max(jnp.abs(
+        f_blk(q, k, v) - f_ref(qT, kT, vT).transpose(0, 2, 1, 3))))
+    emit(rows, "attn_naive_s1024", t_ref * 1e6, "oracle")
+    emit(rows, "attn_blockwise_s1024", t_blk * 1e6,
+         f"max_err={err:.1e};ratio={t_blk/t_ref:.2f}")
+
+
+def bench_wkv6(rows):
+    from repro.kernels.ops import wkv6
+    key = jax.random.PRNGKey(1)
+    b, s, h, p = 1, 512, 4, 64
+    ks = jax.random.split(key, 6)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, p)) for i in range(3))
+    wlog = -jnp.exp(jax.random.normal(ks[3], (b, s, h, p)) - 0.5)
+    u = 0.3 * jax.random.normal(ks[4], (h, p))
+    s0 = jnp.zeros((b, h, p, p))
+    f_ref = jax.jit(lambda *a: ref_wkv6(*a)[0])
+    t_ref = time_fn(f_ref, r, k, v, wlog, u, s0)
+    f_kern = jax.jit(lambda *a: wkv6(*a, chunk=32, interpret=True)[0])
+    t_kern = time_fn(f_kern, r, k, v, wlog, u, s0)
+    err = float(jnp.max(jnp.abs(f_kern(r, k, v, wlog, u, s0)
+                                - f_ref(r, k, v, wlog, u, s0))))
+    emit(rows, "wkv6_ref_seq_s512", t_ref * 1e6, "oracle(sequential)")
+    emit(rows, "wkv6_pallas_interp_s512", t_kern * 1e6,
+         f"max_err={err:.1e}")
+
+
+def bench_rmsnorm(rows):
+    from repro.kernels.ops import fused_rmsnorm
+    x = jax.random.normal(jax.random.PRNGKey(2), (4096, 1024))
+    sc = jnp.ones((1024,))
+    f_ref = jax.jit(lambda a, b: ref_rmsnorm(a, b))
+    f_kern = jax.jit(lambda a, b: fused_rmsnorm(a, b, interpret=True))
+    t_ref = time_fn(f_ref, x, sc)
+    t_kern = time_fn(f_kern, x, sc)
+    err = float(jnp.max(jnp.abs(f_kern(x, sc) - f_ref(x, sc))))
+    emit(rows, "rmsnorm_ref_4096x1024", t_ref * 1e6, "oracle")
+    emit(rows, "rmsnorm_pallas_interp", t_kern * 1e6, f"max_err={err:.1e}")
+
+
+ALL = [bench_attention, bench_wkv6, bench_rmsnorm]

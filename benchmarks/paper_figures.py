@@ -1,0 +1,156 @@
+"""One benchmark per paper table/figure (§IV). Each returns CSV rows
+``name,us_per_call,derived`` where `derived` carries the figure's headline
+quantity (scaling efficiency, sync fraction, speedup, accuracy...).
+
+Measured: reduced-ViT step time on this host. Modeled: cluster collectives
+(core.comm_model) with the paper's cluster parameters (Fig. 3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    ETHERNET_10G,
+    IB_25G,
+    NVLINK_NODE,
+    emit,
+    scale_to_gpu,
+    vit_step_time_and_bytes,
+)
+from repro.core.comm_model import (
+    GPU_SPECS,
+    StepModel,
+    strong_scaling_times,
+    weak_scaling_times,
+)
+
+T4 = GPU_SPECS["t4"]
+
+
+def fig4_5_tesla_scaling(rows):
+    """Figs. 4-5: inter-node strong/weak scaling on the heterogeneous Tesla
+    cluster (3x RTX3070 + GTX1070 + Tesla P4) — reproduces the paper's
+    anti-scaling at 4-5 GPUs."""
+    cpu_t, grad_bytes = vit_step_time_and_bytes()
+    t_ref = scale_to_gpu(cpu_t, 16, GPU_SPECS["rtx3070"])
+    hetero = [1.0, 1.0, 1.0,
+              GPU_SPECS["gtx1070"] / GPU_SPECS["rtx3070"],
+              GPU_SPECS["tesla_p4"] / GPU_SPECS["rtx3070"]]
+    counts = [1, 2, 3, 4, 5]
+    strong = strong_scaling_times(t_ref, grad_bytes, counts,
+                                  comm_bw=ETHERNET_10G, hetero=hetero)
+    weak = weak_scaling_times(t_ref, grad_bytes, counts,
+                              comm_bw=ETHERNET_10G, hetero=hetero)
+    anti = strong[4] > strong[2]      # paper: adding weak GPUs HURTS
+    emit(rows, "fig4_tesla_strong_5gpu", strong[4] * 1e6,
+         f"anti_scaling={anti};t1={strong[0]:.3f}s;t5={strong[4]:.3f}s")
+    emit(rows, "fig5_tesla_weak_5gpu", weak[4] * 1e6,
+         f"flat={max(weak)/min(weak):.2f}x")
+
+
+def fig6_sync_overhead(rows):
+    """Fig. 6: synchronization cost share vs per-GPU batch size (Nebula,
+    2 GPUs). Sync fraction must fall with batch and plateau at 128-256."""
+    cpu_t16, grad_bytes = vit_step_time_and_bytes(16)
+    fracs = {}
+    for bs in (16, 32, 64, 128, 256):
+        t = scale_to_gpu(cpu_t16 * bs / 16, bs, GPU_SPECS["rtx2080ti"])
+        m = StepModel(grad_bytes=grad_bytes, compute_times=[t, t],
+                      comm_bw=NVLINK_NODE,
+                      infeed_bytes_per_mb=bs * 224 * 224 * 3 * 4)
+        fracs[bs] = m.sync_fraction()
+        emit(rows, f"fig6_sync_frac_b{bs}", m.step_time() * 1e6,
+             f"sync_frac={fracs[bs]:.3f}")
+    assert fracs[16] > fracs[128], fracs
+    plateau = abs(fracs[256] - fracs[128]) < abs(fracs[32] - fracs[16])
+    emit(rows, "fig6_plateau_128_256", 0.0, f"plateau={plateau}")
+
+
+def fig7_accuracy_vs_batch(rows):
+    """Fig. 7: train accuracy vs batch size — real reduced-ViT trainings on
+    synthetic CIFAR-10 (trend: moderate batch optimal at fixed steps)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import EngineConfig, get_smoke_config
+    from repro.core.engine import DistributedEngine
+    from repro.data import DATASETS, DataPipeline
+    from repro.launch.mesh import make_local_mesh
+
+    accs = {}
+    for bs in (8, 32, 128):
+        cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+        mesh = make_local_mesh()
+        eng = DistributedEngine(cfg, EngineConfig(
+            train_batch_size=bs, lr=1e-3, total_steps=25, warmup_steps=2),
+            mesh)
+        pipe = DataPipeline(kind="image", global_batch=bs,
+                            dataset=DATASETS["cifar10"],
+                            resolution=cfg.image_size)
+        params, opt = eng.init(seed=0)
+        step = eng.jit_train_step(donate=False)
+        acc = 0.0
+        with mesh:
+            for i, b in enumerate(pipe.batches()):
+                if i >= 25:
+                    break
+                b = jax.tree.map(jnp.asarray, b)
+                params, opt, m = step(params, opt, b, jnp.int32(i))
+                acc = float(m["acc"])
+        accs[bs] = acc
+        emit(rows, f"fig7_acc_b{bs}", 0.0, f"train_acc={acc:.3f}")
+
+
+def fig8_9_vector_scaling(rows):
+    """Figs. 8-9 (+16-17): homogeneous T4 strong/weak scaling on Vector."""
+    cpu_t, grad_bytes = vit_step_time_and_bytes()
+    t_ref = scale_to_gpu(cpu_t * 4, 64, T4)           # batch 64
+    counts = [1, 2, 4, 8]
+    strong = strong_scaling_times(t_ref, grad_bytes, counts,
+                                  comm_bw=NVLINK_NODE)
+    weak = weak_scaling_times(t_ref, grad_bytes, counts,
+                              comm_bw=NVLINK_NODE)
+    half = strong[1] / strong[0]
+    emit(rows, "fig8_vector_strong_2gpu", strong[1] * 1e6,
+         f"t2/t1={half:.3f} (paper: ~0.5)")
+    emit(rows, "fig9_vector_weak_8gpu", weak[3] * 1e6,
+         f"flat={max(weak)/min(weak):.2f}x")
+    assert 0.4 < half < 0.75, half
+
+
+def fig12_13_speedup(rows):
+    """Figs. 12-13: strong-scaling speedup at batch 16 vs 64 — larger batch
+    gives the better speedup curve."""
+    cpu_t, grad_bytes = vit_step_time_and_bytes()
+    counts = [1, 2, 4, 8]
+    out = {}
+    for bs in (16, 64):
+        t_ref = scale_to_gpu(cpu_t * bs / 16, bs, T4)
+        times = strong_scaling_times(t_ref, grad_bytes, counts,
+                                     comm_bw=NVLINK_NODE)
+        speedup = times[0] / np.array(times)
+        out[bs] = speedup[-1]
+        emit(rows, f"fig12_speedup8_b{bs}", times[-1] * 1e6,
+             f"speedup_8gpu={speedup[-1]:.2f}")
+    assert out[64] > out[16], out
+    emit(rows, "fig13_larger_batch_scales_better", 0.0,
+         f"b64={out[64]:.2f}x > b16={out[16]:.2f}x")
+
+
+def fig14_15_multinode(rows):
+    """Figs. 14-15: multi-node single-GPU (inter-node IB) vs single-node
+    multi-GPU (NVLink) strong scaling to 32 — paper: no significant gap."""
+    cpu_t, grad_bytes = vit_step_time_and_bytes()
+    t_ref = scale_to_gpu(cpu_t * 4, 64, T4)
+    counts = [1, 2, 4, 8, 16, 32]
+    inter = strong_scaling_times(t_ref, grad_bytes, counts, comm_bw=IB_25G)
+    intra = strong_scaling_times(t_ref, grad_bytes, counts,
+                                 comm_bw=NVLINK_NODE)
+    gap = inter[-1] / intra[-1]
+    emit(rows, "fig14_multinode_strong_32", inter[-1] * 1e6,
+         f"t32={inter[-1]*1e3:.2f}ms speedup={inter[0]/inter[-1]:.1f}x")
+    emit(rows, "fig15_inter_vs_intra_gap", 0.0,
+         f"gap={gap:.2f}x (paper: ~1)")
+
+
+ALL = [fig4_5_tesla_scaling, fig6_sync_overhead, fig7_accuracy_vs_batch,
+       fig8_9_vector_scaling, fig12_13_speedup, fig14_15_multinode]

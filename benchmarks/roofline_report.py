@@ -1,0 +1,55 @@
+"""§Roofline report: reads the dry-run JSONL produced by
+``python -m repro.launch.dryrun --all --out results/...jsonl`` and emits one
+CSV row per (arch x shape) with the three roofline terms + the bottleneck.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"])] = r   # last write wins
+    return recs
+
+
+def roofline_rows(rows, fname="baseline_singlepod.jsonl",
+                  prefix="roofline"):
+    recs = load(os.path.join(RESULTS, fname))
+    n_ok = n_skip = 0
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skip":
+            n_skip += 1
+            continue
+        if r["status"] != "ok":
+            emit(rows, f"{prefix}_{arch}_{shape}", 0.0,
+                 f"FAIL:{r.get('error', '?')[:60]}")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        emit(rows, f"{prefix}_{arch}_{shape}",
+             rl["bound_step_s"] * 1e6,
+             f"dom={rl['dominant'][:-2]};compute={rl['compute_s']*1e3:.1f}ms"
+             f";mem={rl['memory_s']*1e3:.1f}ms"
+             f";coll={rl['collective_s']*1e3:.1f}ms"
+             f";useful={min(rl['useful_flops_frac'], 9.99):.2f}"
+             f";mem_dev={r['peak_bytes_per_dev']/2**30:.1f}GiB")
+    emit(rows, f"{prefix}_summary", 0.0, f"ok={n_ok};skip={n_skip}")
+
+
+def run(rows):
+    roofline_rows(rows)
+    roofline_rows(rows, "optimized_singlepod.jsonl", prefix="roofline_opt")
+
+
+ALL = [run]

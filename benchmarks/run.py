@@ -1,0 +1,33 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro-
+benchmarks + the dry-run roofline report. Prints ``name,us_per_call,derived``
+CSV (the repo contract)."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figures, roofline_report
+
+    rows = ["name,us_per_call,derived"]
+    suites = paper_figures.ALL + kernel_bench.ALL + roofline_report.ALL
+    t0 = time.time()
+    failures = 0
+    for fn in suites:
+        try:
+            fn(rows)
+        except Exception:  # noqa: BLE001 — report all suites
+            traceback.print_exc()
+            rows.append(f"{fn.__name__},0.00,ERROR")
+            failures += 1
+    print("\n".join(rows))
+    print(f"# {len(rows)-1} rows in {time.time()-t0:.1f}s, "
+          f"{failures} failures", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

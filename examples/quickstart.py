@@ -1,0 +1,51 @@
+"""Quickstart: train a reduced ViT-B/16 on synthetic CIFAR-10 with the
+DeepSpeed-equivalent engine (DDP + gradient accumulation), ~1 minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import EngineConfig, get_smoke_config
+from repro.core.engine import DistributedEngine
+from repro.data import DATASETS, DataPipeline
+from repro.launch.mesh import make_local_mesh
+
+
+def main():
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+    mesh = make_local_mesh()
+
+    # the paper's Appendix-B style config
+    ecfg = EngineConfig(
+        train_batch_size=32,
+        gradient_accumulation_steps=2,   # paper §IV: micro-batching knob
+        zero_stage=0,                    # paper-faithful DDP
+        optimizer="adamw",
+        lr=1e-3, total_steps=40, warmup_steps=4,
+    )
+    engine = DistributedEngine(cfg, ecfg, mesh)
+    pipe = DataPipeline(kind="image", global_batch=32,
+                        dataset=DATASETS["cifar10"],
+                        resolution=cfg.image_size)
+
+    params, opt_state = engine.init(seed=0)
+    train_step = engine.jit_train_step(donate=False)
+
+    print(f"model={cfg.name} params={cfg.param_count()/1e6:.2f}M "
+          f"devices={mesh.devices.size}")
+    with mesh:
+        for step, batch in enumerate(pipe.batches()):
+            if step >= 40:
+                break
+            batch = jax.tree.map(jnp.asarray, batch)
+            params, opt_state, m = train_step(params, opt_state, batch,
+                                              jnp.int32(step))
+            if step % 10 == 0 or step == 39:
+                print(f"step {step:3d}  loss {float(m['loss']):.4f}  "
+                      f"acc {float(m['acc']):.3f}  lr {float(m['lr']):.1e}")
+    print("done — loss should be well below the initial ~2.3")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's experiment, end to end: strong + weak scaling sweep of
+DeepSpeed-style DP training across device counts, on REAL devices (host
+platform devices via subprocess), plus the analytic cluster projection.
+
+    PYTHONPATH=src python examples/scaling_sweep.py --counts 1 2 4
+"""
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+
+
+def run_train(devices: int, batch: int, steps: int = 8) -> float:
+    env = {**os.environ, "PYTHONPATH": "src"}
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "vit-b16",
+         "--smoke", "--steps", str(steps), "--batch", str(batch),
+         "--devices", str(devices), "--log-every", str(steps)],
+        env=env, capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr[-2000:]
+    m = re.search(r"done in ([0-9.]+)s", out.stdout)
+    return float(m.group(1)) if m else time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--counts", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    print("== measured strong scaling (real host devices, fixed global "
+          f"batch {args.batch}) ==")
+    results = {}
+    for n in args.counts:
+        dt = run_train(n, args.batch)
+        results[n] = dt
+        base = results[args.counts[0]]
+        print(f"  {n} devices: {dt:6.1f}s  speedup {base/dt:.2f}x")
+
+    print("\n== analytic projection to the paper's T4 cluster ==")
+    from repro.core.comm_model import strong_scaling_times, weak_scaling_times
+    t = strong_scaling_times(2.0, 344e6, [1, 2, 4, 8, 16, 32],
+                             comm_bw=3.125e9)
+    for n, ti in zip([1, 2, 4, 8, 16, 32], t):
+        print(f"  {n:3d} GPUs: {ti:.3f}s/step  speedup {t[0]/ti:.2f}x")
+    w = weak_scaling_times(2.0, 344e6, [1, 2, 4, 8], comm_bw=3.125e9)
+    print(f"  weak scaling flatness: {max(w)/min(w):.2f}x")
+    json.dump({str(k): v for k, v in results.items()},
+              open("/tmp/repro_scaling.json", "w"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Serving example: batched prefill + greedy decode with a KV/state cache,
+on three different architecture families (attention / SSM / hybrid).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import subprocess
+import sys
+
+
+def main():
+    env = {**os.environ, "PYTHONPATH": "src"}
+    for arch in ("qwen2.5-14b", "rwkv6-7b", "zamba2-2.7b"):
+        print(f"\n=== {arch} ===")
+        r = subprocess.call(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--smoke", "--batch", "2", "--prompt-len", "32",
+             "--gen", "16"], env=env)
+        if r:
+            sys.exit(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import sys       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.dryrun import engine_for  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import input_specs  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="dry-run profiler: top HBM/flops contributors")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--by", default="bytes", choices=["bytes", "flops"])
+    ap.add_argument("--n", type=int, default=25)
+    ap.add_argument("--zero", type=int, default=None)
+    ap.add_argument("--seq-parallel", default=None)
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--bf16-gather", action="store_true")
+    ap.add_argument("--embed", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    eng, cfg, shape = engine_for(args.arch, args.shape, mesh,
+                                 zero=args.zero,
+                                 seq_parallel=args.seq_parallel)
+    if args.moe_impl:
+        eng.cfg = cfg = cfg.replace(moe_impl=args.moe_impl)
+    if args.bf16_gather:
+        eng.ecfg = eng.ecfg.replace(cast_params_bf16=True)
+    if args.embed:
+        eng.ecfg = eng.ecfg.replace(embed_sharding=args.embed)
+
+    if shape.kind == "train":
+        lowered = eng.lower_train(input_specs(cfg, shape))
+    elif shape.kind == "prefill":
+        lowered = eng.lower_prefill(input_specs(cfg, shape))
+    else:
+        lowered = eng.lower_decode(shape.global_batch, shape.seq_len)
+    hlo = lowered.compile().as_text()
+    totals = hlo_analysis.analyze(hlo)
+    print(f"flops/dev={totals.flops:.3e}  hbm/dev={totals.hbm_bytes:.3e}  "
+          f"coll={ {k: f'{v/1e9:.2f}GB' for k, v in totals.coll.items()} }")
+    print(f"\ntop {args.n} by {args.by}:")
+    for score, mult, comp, line in hlo_analysis.top_contributors(
+            hlo, n=args.n, by=args.by):
+        unit = score / 1e9
+        print(f"  {unit:10.2f}G x{mult:6.0f}  [{comp[:40]:40s}] {line[:110]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The paper's §V future work: "evaluate each ZeRO stage to measure memory
+# savings and overhead". This measures it from the compiled dry-run:
+# per-device argument bytes (params + opt state + inputs) for ZeRO 0-3.
+
+import argparse   # noqa: E402
+import sys        # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_pair  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    print(f"ZeRO memory table — {args.arch} x {args.shape}, 256 chips "
+          "(16 dp x 16 tp)\n")
+    print(f"{'stage':>6s} {'args GiB/dev':>14s} {'peak GiB/dev':>14s} "
+          f"{'coll GB/step':>14s} {'bound s':>10s}")
+    for stage in (0, 1, 2, 3):
+        try:
+            rec = run_pair(args.arch, args.shape, zero=stage, verbose=False,
+                           tag=f"zero{stage}")
+        except Exception as e:  # noqa: BLE001 — stage 0 may OOM-by-design
+            print(f"{stage:6d}  FAIL: {type(e).__name__}: {str(e)[:70]}")
+            continue
+        if rec["status"] != "ok":
+            print(f"{stage:6d}  {rec['status']}: {rec.get('error','')[:70]}")
+            continue
+        coll = sum(rec["collectives"].values()) / 1e9
+        print(f"{stage:6d} {rec['argument_bytes_per_dev']/2**30:14.2f} "
+              f"{rec['peak_bytes_per_dev']/2**30:14.2f} {coll:14.1f} "
+              f"{rec['roofline']['bound_step_s']:10.1f}")
+
+
+if __name__ == "__main__":
+    main()

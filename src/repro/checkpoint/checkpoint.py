@@ -1,0 +1,82 @@
+"""Checkpointing: flat-file numpy + JSON manifest, pytree-faithful.
+
+Gathers sharded arrays to host (addressable shards) and restores with the
+target sharding applied via device_put — a single-host stand-in for a real
+distributed checkpoint layer, with the same save/restore API.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {}
+    arrays = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        slot = f"a{len(arrays)}"
+        # store raw bytes: npz cannot serialize ml_dtypes (bfloat16 etc.)
+        arrays[slot] = np.frombuffer(arr.tobytes(), np.uint8)
+        manifest[key] = {"slot": slot, "dtype": str(arr.dtype),
+                         "shape": list(arr.shape)}
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f, indent=1)
+    return d
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
+    """`like`: pytree with the target structure (values ignored)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, _ in flat_like:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        meta = manifest[key]
+        raw = data[meta["slot"]]
+        arr = np.frombuffer(raw.tobytes(), _np_dtype(meta["dtype"])) \
+            .reshape(meta["shape"])
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+def latest_step(ckpt_dir: str) -> int:
+    if not os.path.isdir(ckpt_dir):
+        return -1
+    steps = [int(m.group(1)) for name in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)$", name))]
+    return max(steps, default=-1)

@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+10 assigned architectures (public-pool assignment) + the paper's own ViT-B/16.
+"""
+from __future__ import annotations
+
+from repro.configs import (
+    chatglm3_6b,
+    deepseek_v3_671b,
+    gemma3_12b,
+    glm4_9b,
+    granite_moe_3b,
+    hubert_xlarge,
+    qwen2_5_14b,
+    qwen2_vl_72b,
+    rwkv6_7b,
+    vit_b16,
+    zamba2_2_7b,
+)
+from repro.configs.base import EngineConfig, MeshConfig, ModelConfig
+from repro.configs.shapes import SHAPES, InputShape, applicable, get_shape
+
+_MODULES = (
+    deepseek_v3_671b, qwen2_5_14b, qwen2_vl_72b, hubert_xlarge, glm4_9b,
+    zamba2_2_7b, chatglm3_6b, gemma3_12b, rwkv6_7b, granite_moe_3b, vit_b16,
+)
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+ASSIGNED_ARCHS = tuple(m.ARCH_ID for m in _MODULES[:-1])  # excl. vit-b16
+ALL_ARCHS = tuple(REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ALL_ARCHS}")
+    return REGISTRY[arch].config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ALL_ARCHS}")
+    return REGISTRY[arch].smoke()
+
+
+__all__ = [
+    "ALL_ARCHS", "ASSIGNED_ARCHS", "EngineConfig", "InputShape", "MeshConfig",
+    "ModelConfig", "REGISTRY", "SHAPES", "applicable", "get_config",
+    "get_shape", "get_smoke_config",
+]

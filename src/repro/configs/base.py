@@ -1,0 +1,238 @@
+"""Config system for the repro framework.
+
+Mirrors the role of a DeepSpeed config JSON (the paper's Appendix B) plus a
+model card: a frozen dataclass describing the architecture, and an
+``EngineConfig`` describing the DeepSpeed-style distributed-training knobs
+(train_batch_size / micro_batch_per_gpu / gradient_accumulation_steps /
+zero_stage), which the paper's evaluation sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention dimensions."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts
+    num_shared_experts: int = 0     # always-on shared experts
+    top_k: int = 0
+    d_ff_expert: int = 0            # per-expert FFN width
+    first_dense_layers: int = 0     # leading dense layers (DeepSeek-V3: 3)
+    router_aux_coef: float = 0.001  # load-balance loss coefficient
+    capacity_factor: float = 1.25   # dropless in math; capacity for dispatch
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) / RWKV6 recurrent-block dimensions."""
+    state_dim: int = 64             # N (mamba2) / head_size (rwkv6)
+    head_dim: int = 64              # P per-head channel dim (mamba2)
+    expand: int = 2                 # d_inner = expand * d_model (mamba2)
+    conv_kernel: int = 4            # mamba2 short conv
+    chunk_size: int = 128           # chunked-scan block length
+    decay_lora: int = 64            # rwkv6 data-dependent decay bottleneck
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | vlm | audio | hybrid | ssm | vit
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+
+    # --- block structure -------------------------------------------------
+    block_kind: str = "attn"        # attn | mla | mamba2 | rwkv6
+    # hybrid (zamba2): `hybrid_group` mamba layers share one attention block
+    hybrid_group: int = 0           # 0 = not hybrid
+    causal: bool = True             # False for encoder-only (hubert)
+
+    # --- attention flavour ------------------------------------------------
+    qkv_bias: bool = False
+    rope_style: str = "full"        # full | half | mrope | none
+    rope_theta: float = 10000.0
+    sliding_window: int = 0         # 0 = full attention
+    global_every: int = 0           # gemma3: every Nth layer full, rest local
+    attn_logit_softcap: float = 0.0
+
+    # --- sub-configs -------------------------------------------------------
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # --- embeddings / head --------------------------------------------
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    act: str = "swiglu"             # swiglu | gelu | geglu | sqrelu
+    mtp_depth: int = 0              # DeepSeek-V3 multi-token prediction heads
+    embed_scale: bool = False       # gemma-style sqrt(d) embedding scale
+
+    # --- modality frontends (STUBBED per brief) ------------------------
+    # audio: input is (B, S, audio_feat_dim) precomputed conv features
+    audio_feat_dim: int = 0
+    # vlm: input_specs feeds (B, n_img, d_model) patch embeddings + M-RoPE grid
+    vision_tokens: int = 0          # image tokens per sample in input_specs
+    mrope_sections: Tuple[int, int, int] = (0, 0, 0)
+
+    # --- ViT (the paper's own model) -----------------------------------
+    image_size: int = 0
+    patch_size: int = 0
+    num_classes: int = 0
+
+    # --- numerics -------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    use_pallas: bool = False        # Pallas kernels (TPU; interpret on CPU)
+    attn_impl: str = "naive"        # naive | blockwise (flash-in-XLA)
+    moe_impl: str = "gshard"        # gshard (einsum) | gather (§Perf)
+    attn_block_k: int = 512
+    attn_block_q: int = 512
+    remat: str = "none"             # none | block  (activation checkpointing)
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads > 0 and self.num_kv_heads > 0:
+            assert self.num_heads % self.num_kv_heads == 0, (
+                f"{self.name}: num_heads {self.num_heads} not divisible by "
+                f"kv heads {self.num_kv_heads}")
+
+    # ------------------------------------------------------------------
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.block_kind in ("mamba2", "rwkv6")
+
+    def supports_long_decode(self) -> bool:
+        """True if decode state is sub-linear in context (SSM/hybrid) or the
+        attention is sliding-window (bounded local KV)."""
+        return self.is_attention_free or self.hybrid_group > 0 or \
+            self.sliding_window > 0
+
+    def supports_decode(self) -> bool:
+        return not self.is_encoder_only and self.arch_type != "vit"
+
+    def layer_windows(self):
+        """Per-layer sliding window (0=full) honoring gemma3 local:global."""
+        if self.sliding_window == 0:
+            return [0] * self.num_layers
+        if self.global_every <= 0:
+            return [self.sliding_window] * self.num_layers
+        return [0 if (i + 1) % self.global_every == 0 else self.sliding_window
+                for i in range(self.num_layers)]
+
+    # --- parameter counting (for roofline MODEL_FLOPS) -----------------
+    def param_count(self) -> int:
+        from repro.models.params import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.params import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Engine (DeepSpeed-equivalent) configuration — the paper's Appendix B knobs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """DeepSpeed-style engine config.
+
+    Invariant (DeepSpeed semantics, enforced):
+        train_batch_size ==
+            micro_batch_per_gpu * gradient_accumulation_steps * dp_world_size
+    """
+    train_batch_size: int = 32
+    micro_batch_per_gpu: int = 0        # 0 -> derived
+    gradient_accumulation_steps: int = 1
+    zero_stage: int = 0                 # 0=DDP (paper), 1, 2, 3(FSDP)
+    optimizer: str = "adamw"            # adamw | sgd | lamb
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    lr_schedule: str = "cosine"
+    total_steps: int = 1000
+    seed: int = 0
+    # parallelism (beyond-paper: TP / Ulysses SP on the `model` axis)
+    tensor_parallel: bool = True
+    sequence_parallel: str = "none"     # none | ulysses
+    expert_parallel: bool = True
+    cast_params_bf16: bool = False      # §Perf: bf16 gather, f32 master
+    embed_sharding: str = "vocab"       # vocab | dmodel (§Perf)
+
+    def derived_micro_batch(self, dp_world: int) -> int:
+        if self.micro_batch_per_gpu:
+            return self.micro_batch_per_gpu
+        mb, rem = divmod(self.train_batch_size,
+                         self.gradient_accumulation_steps * dp_world)
+        if rem:
+            raise ValueError(
+                f"train_batch_size={self.train_batch_size} not divisible by "
+                f"accum={self.gradient_accumulation_steps} * dp={dp_world}")
+        return mb
+
+    def validate(self, dp_world: int) -> None:
+        mb = self.derived_micro_batch(dp_world)
+        got = mb * self.gradient_accumulation_steps * dp_world
+        if got != self.train_batch_size:
+            raise ValueError(
+                "DeepSpeed batch invariant violated: "
+                f"{mb} * {self.gradient_accumulation_steps} * {dp_world} "
+                f"= {got} != train_batch_size={self.train_batch_size}")
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Production mesh axes. `pod` is the DCN (inter-pod) axis."""
+    data: int = 16
+    model: int = 16
+    pod: int = 1
+
+    @property
+    def num_devices(self) -> int:
+        return self.data * self.model * self.pod
+
+    @property
+    def dp_world(self) -> int:
+        # gradients reduce over data AND pod axes (hierarchical all-reduce)
+        return self.data * self.pod
+
+    @property
+    def axis_names(self):
+        return ("pod", "data", "model") if self.pod > 1 else ("data", "model")
+
+    @property
+    def shape(self):
+        return ((self.pod, self.data, self.model) if self.pod > 1
+                else (self.data, self.model))

@@ -1,0 +1,41 @@
+"""Gemma3-12B — dense, 5:1 local:global sliding window, 128k context.
+[hf:google/gemma-3-1b-pt family]
+
+Every 6th layer is global attention; the other 5 use a 1024-token sliding
+window. The sliding-window variant bounds local-layer KV, which is how
+long_500k decode runs for this dense arch (DESIGN.md §4) — global layers
+keep full KV (1/6 of layers).
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "gemma3-12b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        num_layers=48,
+        d_model=3840,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=256,                # gemma3 decouples head_dim from d_model
+        d_ff=15360,
+        vocab_size=262144,
+        rope_style="full",
+        rope_theta=1000000.0,
+        sliding_window=1024,
+        global_every=6,              # 5 local : 1 global
+        attn_logit_softcap=0.0,
+        tie_embeddings=True,
+        embed_scale=True,
+        norm_eps=1e-6,
+        act="geglu",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name=ARCH_ID + "-smoke", num_layers=2, d_model=256, num_heads=4,
+        num_kv_heads=2, head_dim=64, d_ff=512, vocab_size=512,
+        sliding_window=64, global_every=2)

@@ -1,0 +1,30 @@
+"""GLM-4-9B — dense, RoPE, GQA kv=2. [hf:THUDM/glm-4-9b]"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "glm4-9b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        num_layers=40,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        head_dim=128,
+        d_ff=13696,
+        vocab_size=151552,
+        qkv_bias=True,
+        rope_style="half",           # GLM rotary on half the head dims
+        rope_theta=10000.0,
+        norm_eps=1.5625e-7,
+        act="swiglu",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name=ARCH_ID + "-smoke", num_layers=2, d_model=256, num_heads=8,
+        num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512,
+        norm_eps=1e-6)

@@ -1,0 +1,39 @@
+"""HuBERT-XLarge — encoder-only audio transformer (w2v2 arch).
+[arXiv:2106.07447]
+
+Audio carve-out per brief: the mel-spectrogram + conv feature extractor is
+STUBBED — ``input_specs()`` provides precomputed frame features
+(B, S, audio_feat_dim) which the model linearly projects to d_model. Training
+objective is masked prediction over a 504-class codebook (the HuBERT target
+vocabulary). Encoder-only ⇒ no decode shapes (DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "hubert-xlarge"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="audio",
+        num_layers=48,
+        d_model=1280,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=80,
+        d_ff=5120,
+        vocab_size=504,
+        causal=False,                 # encoder-only
+        rope_style="none",            # w2v2 uses conv positional embeds; we
+                                      # use learned absolute (stub frontend)
+        audio_feat_dim=512,           # conv extractor output width
+        norm_eps=1e-5,
+        act="gelu",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name=ARCH_ID + "-smoke", num_layers=2, d_model=256, num_heads=4,
+        num_kv_heads=4, head_dim=64, d_ff=512, vocab_size=64,
+        audio_feat_dim=32)

@@ -1,0 +1,39 @@
+"""Qwen2-VL-72B language backbone — M-RoPE, dynamic resolution.
+[arXiv:2409.12191]
+
+VLM carve-out per brief: the ViT vision tower + projector are STUBBED —
+``input_specs()`` provides precomputed patch embeddings (B, vision_tokens,
+d_model) and the 3D M-RoPE position grid (temporal, height, width sections).
+This module is the 80-layer decoder that consumes them.
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen2-vl-72b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_style="mrope",
+        mrope_sections=(16, 24, 24),   # t/h/w split of the 64 rope pairs
+        rope_theta=1000000.0,
+        vision_tokens=1024,            # patch embeds per sample in input_specs
+        norm_eps=1e-6,
+        act="swiglu",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name=ARCH_ID + "-smoke", num_layers=2, d_model=256, num_heads=8,
+        num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512,
+        mrope_sections=(4, 6, 6), vision_tokens=16)

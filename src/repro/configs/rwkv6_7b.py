@@ -1,0 +1,40 @@
+"""RWKV6-7B "Finch" — attention-free, data-dependent decay.
+[arXiv:2404.05892]
+
+WKV6 recurrence with per-channel data-dependent decay (LoRA-projected),
+token-shift mixing. O(1) decode state ⇒ long_500k runs.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+ARCH_ID = "rwkv6-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="ssm",
+        num_layers=32,
+        d_model=4096,
+        num_heads=64,                # d_model / head_size(=64)
+        num_kv_heads=64,
+        head_dim=64,
+        d_ff=14336,
+        vocab_size=65536,
+        block_kind="rwkv6",
+        # chunk 32 (not 128): §Perf — the XLA-path pairwise-decay tensor
+        # scales with S*chunk*H*P; 32 measured 4.2x less HBM traffic than
+        # 128 (and matches the Pallas kernel's VMEM tile budget)
+        ssm=SSMConfig(state_dim=64, head_dim=64, chunk_size=32,
+                      decay_lora=64),
+        rope_style="none",
+        norm_eps=1e-5,
+        act="sqrelu",                # rwkv channel-mix uses squared relu
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name=ARCH_ID + "-smoke", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+        ssm=SSMConfig(state_dim=32, head_dim=32, chunk_size=32,
+                      decay_lora=16))

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: the DeepSpeed-equivalent distributed
+training engine (DDP + grad accumulation + ZeRO stages + Ulysses SP) with
+the analytic cluster scaling model used to reproduce the paper's figures."""
+from repro.core.engine import DistributedEngine  # noqa: F401
+from repro.core.comm_model import (  # noqa: F401
+    TPU_V5E,
+    Hardware,
+    StepModel,
+    allreduce_time,
+    hierarchical_allreduce_time,
+    strong_scaling_times,
+    weak_scaling_times,
+)

@@ -1,0 +1,124 @@
+"""Analytic communication/compute cost model — the 'cluster simulator'.
+
+The paper measures wall-clock sync overhead on real GPU clusters (Figs. 4-6,
+14-15); this container has one CPU, so scaling curves are *modeled*: measured
+single-device compute time × an analytic collective model, with hardware
+constants for the TPU v5e target (and the paper's clusters, for the
+heterogeneous Tesla reproduction).
+
+Ring all-reduce time:  t = 2 (n-1)/n * bytes / bw   (+ per-hop latency)
+Hierarchical (multi-pod): reduce-scatter intra-pod (ICI) -> all-reduce
+across pods (DCN) -> all-gather intra-pod.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12        # bf16 / chip
+    hbm_bw: float = 819e9             # B/s
+    ici_bw: float = 50e9              # B/s per link
+    dcn_bw: float = 6.25e9            # B/s per chip, inter-pod
+    link_latency: float = 1e-6        # s per hop
+    host_infeed_bw: float = 10e9      # B/s host->HBM (paper's Fig6 plateau)
+
+
+TPU_V5E = Hardware()
+
+# The paper's clusters (§III Fig.3), fp32 GEMM throughput estimates.
+GPU_SPECS = {
+    "rtx3070": 20.3e12, "gtx1070": 6.5e12, "tesla_p4": 5.5e12,
+    "t4": 8.1e12, "rtx2080ti": 13.4e12,
+}
+
+
+def allreduce_time(nbytes: float, n: int, bw: float,
+                   latency: float = 1e-6) -> float:
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * nbytes / bw + 2 * (n - 1) * latency
+
+
+def reduce_scatter_time(nbytes: float, n: int, bw: float,
+                        latency: float = 1e-6) -> float:
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * nbytes / bw + (n - 1) * latency
+
+
+def allgather_time(nbytes: float, n: int, bw: float,
+                   latency: float = 1e-6) -> float:
+    return reduce_scatter_time(nbytes, n, bw, latency)
+
+
+def hierarchical_allreduce_time(nbytes: float, intra: int, pods: int,
+                                hw: Hardware = TPU_V5E) -> float:
+    """reduce-scatter (ICI) -> cross-pod all-reduce (DCN) -> all-gather."""
+    t = reduce_scatter_time(nbytes, intra, hw.ici_bw, hw.link_latency)
+    t += allreduce_time(nbytes / max(intra, 1), pods, hw.dcn_bw, 50e-6)
+    t += allgather_time(nbytes, intra, hw.ici_bw, hw.link_latency)
+    return t
+
+
+@dataclass
+class StepModel:
+    """DeepSpeed-style data-parallel step time model.
+
+    compute_times: per-device per-microbatch fwd+bwd seconds — heterogeneous
+    clusters (the paper's Tesla setup) pass unequal values; the step
+    synchronizes on the slowest device (the paper's §IV-B observation).
+    """
+    grad_bytes: float
+    compute_times: Sequence[float] = field(default_factory=lambda: [1.0])
+    comm_bw: float = TPU_V5E.ici_bw
+    latency: float = 1e-6
+    accum_steps: int = 1
+    infeed_bytes_per_mb: float = 0.0
+    infeed_bw: float = TPU_V5E.host_infeed_bw
+
+    def step_time(self) -> float:
+        n = len(self.compute_times)
+        compute = max(self.compute_times) * self.accum_steps
+        infeed = self.infeed_bytes_per_mb * self.accum_steps / self.infeed_bw
+        sync = allreduce_time(self.grad_bytes, n, self.comm_bw, self.latency)
+        return compute + max(infeed - compute, 0.0) + sync
+
+    def sync_fraction(self) -> float:
+        n = len(self.compute_times)
+        sync = allreduce_time(self.grad_bytes, n, self.comm_bw, self.latency)
+        return sync / self.step_time()
+
+
+def strong_scaling_times(single_dev_time: float, grad_bytes: float,
+                         device_counts: Sequence[int],
+                         comm_bw: float = TPU_V5E.ici_bw,
+                         hetero: Sequence[float] | None = None):
+    """Fixed global workload split across n devices (paper Figs. 4, 8, 14).
+    hetero: optional per-device relative speeds (1.0 = reference)."""
+    out = []
+    for n in device_counts:
+        speeds = (hetero or [1.0] * n)[:n]
+        per_dev = [single_dev_time / n / s for s in speeds]
+        m = StepModel(grad_bytes=grad_bytes, compute_times=per_dev,
+                      comm_bw=comm_bw)
+        out.append(m.step_time())
+    return out
+
+
+def weak_scaling_times(single_dev_time: float, grad_bytes: float,
+                       device_counts: Sequence[int],
+                       comm_bw: float = TPU_V5E.ici_bw,
+                       hetero: Sequence[float] | None = None):
+    """Per-device workload fixed (paper Figs. 5, 9, 17)."""
+    out = []
+    for n in device_counts:
+        speeds = (hetero or [1.0] * n)[:n]
+        per_dev = [single_dev_time / s for s in speeds]
+        m = StepModel(grad_bytes=grad_bytes, compute_times=per_dev,
+                      comm_bw=comm_bw)
+        out.append(m.step_time())
+    return out

@@ -1,0 +1,66 @@
+"""Gradient accumulation — DeepSpeed's gradient_accumulation_steps semantics
+as a jit-able lax.scan over micro-batches, fp32 accumulators."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_microbatches(batch, accum: int):
+    """(B, ...) leaves -> (accum, B/accum, ...)."""
+    def split(x):
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (accum,))
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape((accum, b // accum) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def _constrain_tree(tree, specs):
+    if specs is None:
+        return tree
+    import jax.lax as lax
+
+    def con(x, s):
+        try:
+            return lax.with_sharding_constraint(x, s)
+        except (ValueError, RuntimeError):
+            return x
+    return jax.tree.map(con, tree, specs)
+
+
+def accumulate_gradients(loss_fn, params, batch, accum: int,
+                         grad_specs=None):
+    """loss_fn(params, microbatch) -> (loss, metrics).
+
+    Returns (mean grads fp32, mean metrics). One fwd+bwd per micro-batch,
+    sequential scan — gradients averaged, exactly DeepSpeed's
+    micro_batch_per_gpu × gradient_accumulation_steps contract.
+
+    grad_specs (§Perf / ZeRO-2 semantics): PartitionSpec tree for the fp32
+    accumulator. Constraining it dp-sharded makes GSPMD REDUCE-SCATTER each
+    micro-step's gradients into a 1/dp-sized carry instead of all-reducing
+    into a replicated one — this is exactly DeepSpeed ZeRO stage 2.
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if accum == 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return _constrain_tree(grads, grad_specs), metrics
+
+    mbs = split_microbatches(batch, accum)
+
+    def body(acc, mb):
+        (loss, metrics), grads = grad_fn(params, mb)
+        acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / accum, acc, grads)
+        return _constrain_tree(acc, grad_specs), metrics
+
+    zero = _constrain_tree(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        grad_specs)
+    grads, metrics = jax.lax.scan(body, zero, mbs)
+    metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+    return grads, metrics

@@ -1,0 +1,210 @@
+"""Sharding policy: DeepSpeed stages mapped to GSPMD PartitionSpecs.
+
+ZeRO semantics on TPU (DESIGN.md §3): stages are expressed as sharding specs
+rather than manual bucketing —
+
+  stage 0 (paper-faithful DDP): params + opt state replicated over the dp
+      axes; GSPMD inserts the gradient all-reduce the paper measures.
+  stage 1: optimizer state sharded over dp, params replicated.
+  stage 2: stage 1 + gradients reduce-scattered (GSPMD does this
+      automatically once the *consumer* — the opt update — is dp-sharded).
+  stage 3 (FSDP): parameters themselves sharded over dp; per-layer
+      all-gather on use.
+
+Tensor parallelism (Megatron column/row) over the `model` axis and expert
+parallelism for MoE compose orthogonally.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# rule table: (path regex, spec builder). `fsdp` is the dp axis (or None),
+# `tp` the model axis (or None). Specs are for the UNSTACKED leaf; a leading
+# None is prepended for scan-stacked leaves (leading L axis).
+# ---------------------------------------------------------------------------
+
+def _rules(fsdp, tp, embed_sharding="vocab"):
+    return [
+        # --- MoE experts (leading E axis -> expert parallel over tp) ---
+        (r"experts/w_(gate|up)$", P(tp, fsdp, None)),
+        (r"experts/w_out$", P(tp, None, fsdp)),
+        (r"/router$", P(fsdp, None)),
+        # --- attention projections (Megatron col/row) ---
+        (r"attn/w?[qkvg]$|attn/w_(uq|uk|uv)$", P(fsdp, tp)),
+        (r"attn/(wo|w_o)$", P(tp, fsdp)),
+        (r"attn/w_(dq|dkv)$", P(fsdp, None)),
+        (r"attn/b[qkv]$", P(tp)),
+        # --- dense mlp ---
+        (r"mlp/w_(gate|up)$|shared/w_(gate|up)$", P(fsdp, tp)),
+        (r"mlp/w_out$|shared/w_out$", P(tp, fsdp)),
+        (r"mlp/b_up$", P(tp)),
+        # --- mamba2 ---
+        (r"mamba/w_in$", P(fsdp, tp)),
+        (r"mamba/w_out$", P(tp, fsdp)),
+        (r"mamba/conv_w$", P(None, tp)),
+        (r"mamba/conv_b$", P(tp)),
+        # --- rwkv6 ---
+        (r"time_mix/w_[rkvg]$", P(fsdp, tp)),
+        (r"time_mix/w_o$", P(tp, fsdp)),
+        (r"time_mix/decay_w1$", P(fsdp, None)),
+        (r"time_mix/decay_w2$", P(None, tp)),
+        (r"time_mix/lora_w1$", P(fsdp, None)),
+        (r"time_mix/lora_w2$", P(None, None, fsdp)),
+        (r"time_mix/(ln_scale|ln_bias|decay_base)$", P(tp)),
+        (r"time_mix/bonus_u$", P(tp, None)),
+        (r"channel_mix/w_[k]$", P(fsdp, tp)),
+        (r"channel_mix/w_v$", P(tp, fsdp)),
+        (r"channel_mix/w_r$", P(fsdp, tp)),
+        # --- embeddings / head ---
+        # "vocab": Megatron-style vocab-parallel (gather needs masking —
+        # XLA SPMD falls back to full remat; see §Perf). "dmodel": shard the
+        # feature dim instead; the token gather is then shard-local.
+        (r"embed/tok$", P(tp, fsdp) if embed_sharding == "vocab"
+         else P(None, tp)),
+        (r"head/w$", P(fsdp, tp)),
+        (r"embed/(patch_w|feat_proj)$", P(None, fsdp)),
+        (r"embed/pos$", P(None, fsdp)),
+        # --- mtp projection ---
+        (r"mtp/proj$", P(fsdp, None)),
+    ]
+
+
+_STACKED = re.compile(r"(^|/)(stack|dense_stack|moe_stack)(/|$)")
+
+
+def _keystr(path):
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _divisible(dim: int, axes, mesh_shape) -> bool:
+    if axes is None:
+        return True
+    names = axes if isinstance(axes, tuple) else (axes,)
+    extent = int(np.prod([mesh_shape[a] for a in names]))
+    return dim % extent == 0
+
+
+def _sanitize(spec: P, shape, mesh_shape) -> P:
+    """Drop sharding on any dim the mesh extent doesn't divide (GSPMD would
+    pad; we prefer predictable layouts and report it instead)."""
+    out = []
+    for i, ax in enumerate(spec):
+        out.append(ax if ax is not None
+                   and _divisible(shape[i], ax, mesh_shape) else None)
+    return P(*out)
+
+
+def param_specs(params, *, zero_stage: int, tensor_parallel: bool,
+                mesh, dp_axes=("data",), tp_axis: Optional[str] = "model",
+                for_opt_state: bool = False, embed_sharding: str = "vocab"):
+    """PartitionSpec pytree matching ``params``.
+
+    for_opt_state: ZeRO-1/2 shard the *optimizer state* even when params are
+    replicated (stage < 3).
+    """
+    shard_params = zero_stage >= 3 or for_opt_state and zero_stage >= 1
+    fsdp = tuple(dp_axes) if shard_params else None
+    if fsdp is not None and len(fsdp) == 1:
+        fsdp = fsdp[0]
+    tp = tp_axis if tensor_parallel else None
+    rules = _rules(fsdp, tp, embed_sharding)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_one(path, leaf):
+        ks = _keystr(path)
+        stacked = bool(_STACKED.search(ks))
+        base = None
+        for pat, spec in rules:
+            if re.search(pat, ks):
+                base = spec
+                break
+        if base is None:
+            # norms, scalars, small vectors: shard over fsdp if it divides
+            base = P(fsdp) if leaf.ndim >= 1 and not stacked else P()
+            if stacked:
+                base = P(None, fsdp) if leaf.ndim >= 2 else P(None)
+            ndim_expected = leaf.ndim
+            base = P(*(tuple(base) + (None,) * (ndim_expected - len(base))))
+            return _sanitize(base, leaf.shape, mesh_shape)
+        if stacked:
+            base = P(*((None,) + tuple(base)))
+        # pad to leaf ndim
+        base = P(*(tuple(base) + (None,) * (leaf.ndim - len(base))))
+        return _sanitize(base, leaf.shape, mesh_shape)
+
+    return jax.tree_util.tree_map_with_path(spec_one, params)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activations / batch / cache
+# ---------------------------------------------------------------------------
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(cfg, batch_shapes, mesh):
+    """Shard every batch leaf over the dp axes on its leading (batch) dim."""
+    dp = dp_axes_of(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_one(leaf):
+        base = P(*((dp,) + (None,) * (len(leaf.shape) - 1))) \
+            if leaf.ndim >= 1 else P()
+        return _sanitize(base, leaf.shape, mesh_shape)
+
+    return jax.tree.map(spec_one, batch_shapes)
+
+
+def cache_specs(cfg, cache_shapes, mesh, *, tp_axis="model"):
+    """KV / recurrent-state cache sharding for decode.
+
+    Layout conventions (see models/transformer.init_cache):
+      attn k/v       (L, B, S, KH, hd)   -> batch over dp, SEQ over model
+      mla c_kv       (L, B, S, r)        -> batch over dp, seq over model
+      rwkv wkv       (L, B, H, P, P)     -> batch over dp, heads over model
+      mamba ssd      (L, B, H, P, N)     -> batch over dp, heads over model
+      shifts/conv    (L, B, ...)         -> batch over dp
+
+    Sequence-sharded KV turns decode attention into a distributed
+    flash-decoding: GSPMD lowers the softmax/contraction over the sharded T
+    axis to partial reductions + small all-reduces, so the 524k-token cache
+    never materializes on one chip.
+    """
+    dp = dp_axes_of(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_one(path, leaf):
+        ks = _keystr(path)
+        nd = leaf.ndim
+        if re.search(r"(^|/)(k|v|c_kv|k_rope)$", ks):
+            # (L, B, S, ...) -> seq over tp
+            base = (None, dp, tp_axis) + (None,) * (nd - 3)
+        elif re.search(r"(^|/)(wkv|ssd)$", ks):
+            base = (None, dp, tp_axis) + (None,) * (nd - 3)
+        elif re.search(r"conv$", ks):
+            base = (None, dp, None, tp_axis)
+        else:  # shifts etc. (L, B, D)
+            base = (None, dp) + (None,) * (nd - 2)
+        return _sanitize(P(*base), leaf.shape, mesh_shape)
+
+    return jax.tree_util.tree_map_with_path(spec_one, cache_shapes)

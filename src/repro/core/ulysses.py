@@ -1,0 +1,59 @@
+"""DeepSpeed-Ulysses sequence parallelism, TPU-native (the paper's §V
+future-work item, built as a first-class feature).
+
+Ulysses [arXiv:2309.14509] shards the *sequence* dimension across workers
+between blocks and all_to_all-reshards to *head* sharding inside attention.
+On TPU we express the same schedule as GSPMD sharding constraints
+(models/shardctx.py): activations constrained S-sharded on the `model` axis,
+q/k/v constrained H-sharded inside attention — the compiler lowers the
+reshard pair to the identical all_to_all collectives. The paper proposed
+partitioning ViTs "along the image-patches dimension"; for the assigned LLM
+architectures the patch dimension *is* the sequence dimension.
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.shardctx import ShardHints
+
+
+def make_hints(mesh, cfg=None, *, sequence_parallel: str = "none",
+               tp_axis: str = "model", expert_parallel: bool = True):
+    """Build activation-sharding hints, honoring head divisibility.
+
+    Padded KV-head shardings (e.g. gemma3 kv=8 on a 16-way model axis) make
+    GSPMD re-gather K/V inside every attention k-block iteration — a
+    multi-TB/step collective storm found in §Perf round 2. Queries tolerate
+    padding fine (round 4: a sequence-sharded-q fallback regressed qwen2.5
+    prefill 8x and was reverted). Decision:
+      q:  head sharding always (padded when q-heads don't divide)
+      kv: head sharding when divisible, else replicated over model
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp[0] if len(dp) == 1 else dp
+    ep = tp_axis if (expert_parallel and tp_axis in mesh.axis_names) else None
+    tp_ext = dict(zip(mesh.axis_names, mesh.devices.shape)).get(tp_axis, 1)
+    q_ok = cfg is None or cfg.num_heads % tp_ext == 0
+    kv_ok = cfg is None or (cfg.num_kv_heads % tp_ext == 0
+                            and cfg.num_kv_heads > 0)
+
+    attn_kv = P(dp, None, tp_axis, None) if kv_ok else P(dp, None, None,
+                                                         None)
+    attn_q = P(dp, None, tp_axis, None)
+    attn_out = P(dp, None, tp_axis, None)
+
+    if sequence_parallel == "ulysses" and q_ok and kv_ok:
+        return ShardHints(
+            act=P(dp, tp_axis, None),             # (B, S, D): S sharded
+            attn_q=P(dp, None, tp_axis, None),    # inside attn: H sharded
+            attn_kv=P(dp, None, tp_axis, None),
+            attn_seq=P(dp, tp_axis, None, None),  # back to S sharded
+            expert=ep,
+        )
+    return ShardHints(
+        act=P(dp, None, None),
+        attn_q=attn_q,
+        attn_kv=attn_kv,
+        attn_seq=attn_out,
+        expert=ep,
+    )

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    DATASETS,
+    DatasetSpec,
+    make_image_batch,
+    make_token_batch,
+)
+from repro.data.pipeline import DataPipeline  # noqa: F401

@@ -1,0 +1,62 @@
+"""Host data pipeline: per-process sharded loading + device placement.
+
+Mirrors the paper's DataLoader-with-DistributedSampler setup: each dp rank
+sees a disjoint shard; weak-scaling mode subsets the dataset proportionally
+to world size (the paper's §IV-A weak-scaling protocol).
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import DatasetSpec, make_image_batch, \
+    make_token_batch
+
+
+class DataPipeline:
+    def __init__(self, *, kind: str, global_batch: int, seed: int = 0,
+                 dataset: Optional[DatasetSpec] = None, vocab: int = 0,
+                 seq_len: int = 0, resolution: Optional[int] = None,
+                 weak_scaling_frac: float = 1.0, epoch_size: int = 0):
+        """kind: 'image' | 'token'. weak_scaling_frac: fraction of the
+        dataset used (paper: n_gpus x 10%)."""
+        assert kind in ("image", "token")
+        self.kind = kind
+        self.global_batch = global_batch
+        self.seed = seed
+        self.dataset = dataset
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.resolution = resolution
+        n = epoch_size or (dataset.num_images if dataset else 50_000)
+        self.epoch_size = int(n * weak_scaling_frac)
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return max(1, math.floor(self.epoch_size / self.global_batch))
+
+    def batches(self, epoch: int = 0) -> Iterator[dict]:
+        for i in range(self.steps_per_epoch):
+            seed = hash((self.seed, epoch, i)) % (2 ** 31)
+            if self.kind == "image":
+                yield make_image_batch(self.dataset, self.global_batch,
+                                       seed=seed, resolution=self.resolution)
+            else:
+                yield make_token_batch(self.vocab, self.global_batch,
+                                       self.seq_len, seed=seed)
+
+    def device_put(self, batch, shardings=None):
+        if shardings is None:
+            return jax.tree.map(jax.device_put, batch)
+        return jax.tree.map(jax.device_put, batch, shardings)
+
+    def local_shard(self, batch, rank: int, world: int):
+        """The per-process slice a multi-host launcher would load (tested on
+        one host; used by the launcher's process-sharded path)."""
+        def slc(x):
+            per = x.shape[0] // world
+            return x[rank * per:(rank + 1) * per]
+        return jax.tree.map(slc, batch)

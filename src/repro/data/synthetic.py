@@ -1,0 +1,60 @@
+"""Deterministic synthetic datasets with the exact shapes/cardinalities of
+the paper's datasets (Table I). The data gate (CIFAR/ImageNet downloads) is
+simulated per the brief: images are seeded pseudo-random with class-dependent
+structure so accuracy curves are learnable (the paper's Fig. 7/10 trends),
+labels are balanced.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    num_classes: int
+    num_images: int
+    resolution: int
+
+    @property
+    def channels(self):
+        return 3
+
+
+# Paper Table I
+DATASETS = {
+    "cifar10": DatasetSpec("cifar10", 10, 60_000, 32),
+    "cifar100": DatasetSpec("cifar100", 100, 60_000, 32),
+    "imagenet100": DatasetSpec("imagenet100", 100, 100_000, 224),
+}
+
+
+def make_image_batch(spec: DatasetSpec, batch: int, *, seed: int,
+                     resolution: int | None = None):
+    """Class-conditional synthetic images: per-class fixed template + noise.
+    Learnable by a linear probe, so train-accuracy trends are meaningful."""
+    res = resolution or spec.resolution
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, spec.num_classes, (batch,))
+    # fixed per-class templates (seeded independently of `seed`)
+    trng = np.random.default_rng(1234)
+    templates = trng.normal(0, 1, (spec.num_classes, 8, 8, 3)).astype(
+        np.float32)
+    up = templates[labels]
+    reps = res // 8 + 1
+    up = np.tile(up, (1, reps, reps, 1))[:, :res, :res]
+    noise = rng.normal(0, 0.7, (batch, res, res, 3)).astype(np.float32)
+    return {"images": (up + noise).astype(np.float32),
+            "labels": labels.astype(np.int32)}
+
+
+def make_token_batch(vocab: int, batch: int, seq: int, *, seed: int):
+    rng = np.random.default_rng(seed)
+    # order-2 markov-ish stream: learnable next-token structure
+    base = rng.integers(0, vocab, (batch, seq))
+    shifted = np.roll(base, 1, axis=1)
+    mix = rng.random((batch, seq)) < 0.5
+    toks = np.where(mix, (shifted * 31 + 7) % vocab, base)
+    return {"tokens": toks.astype(np.int32)}

@@ -1,0 +1,129 @@
+"""Flash attention Pallas TPU kernel — online-softmax, VMEM-tiled.
+
+TPU adaptation (DESIGN.md §6): the GPU flash algorithm's warp-level softmax
+reductions become full-tile VPU reductions; tiles are MXU-aligned
+(block_q × head_dim and block_k × head_dim multiples of 128 where the
+head_dim allows). Grid = (batch, q_heads, q_blocks, k_blocks) with the
+k-block axis innermost and sequential ("arbitrary"), carrying the running
+max/denominator/accumulator in VMEM scratch. GQA is expressed in the K/V
+BlockSpec index maps (kv_head = q_head // group), so no K/V replication is
+materialized in HBM.
+
+The sliding ``window`` and causal flags arrive as scalar-prefetch operands
+(SMEM), keeping one compiled kernel for gemma3's per-layer local/global mix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(meta_ref,            # SMEM scalar prefetch: [causal, window]
+            q_ref, k_ref, v_ref,  # VMEM tiles
+            o_ref,                # VMEM out tile
+            m_scr, l_scr, acc_scr,
+            *, block_q, block_k, scale, num_k_blocks):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    causal = meta_ref[0]
+    window = meta_ref[1]
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, dv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.where(causal > 0, k_pos <= q_pos, True)
+    mask &= jnp.where(window > 0, (q_pos - k_pos) < window, True)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    """q (B,H,S,D), k/v (B,KH,T,D). window: int32 scalar (0=full, may be
+    traced). Returns (B,H,S,D) in q.dtype."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    g = h // kh
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    nq = pl.cdiv(s, block_q)
+    nk = pl.cdiv(t, block_k)
+
+    meta = jnp.array([1 if causal else 0, 0], jnp.int32) \
+        .at[1].set(jnp.asarray(window, jnp.int32))
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, scale=d ** -0.5,
+        num_k_blocks=nk)
+
+    # index maps receive (*grid_indices, *scalar_prefetch_refs)
+    def q_map(bb, hh, qi, ki, meta):
+        return (bb, hh, qi, 0)
+
+    def kv_map(bb, hh, qi, ki, meta):
+        return (bb, hh // g, ki, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, d), q_map),
+                pl.BlockSpec((1, 1, block_k, d), kv_map),
+                pl.BlockSpec((1, 1, block_k, dv), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, dv), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(meta, q, k, v)
+    return out

@@ -1,0 +1,49 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU-only container the kernels execute in ``interpret=True`` mode
+(the kernel body runs in Python/XLA-CPU); on a real TPU backend they compile
+to Mosaic. `interpret=None` auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import fused_rmsnorm as _rmsnorm
+from repro.kernels.wkv6 import wkv6_chunked_kernel as _wkv6
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_mha(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
+              interpret=None):
+    """q (B,S,H,D), k/v (B,T,KH,D) — model layout. GQA folded in-kernel."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _flash(qt, kt, vt, causal=causal, window=window, block_q=block_q,
+                 block_k=block_k, interpret=_auto_interpret(interpret))
+    return out.transpose(0, 2, 1, 3)
+
+
+def wkv6(r, k, v, wlog, u, s0, *, chunk=32, interpret=None):
+    """r/k/v/wlog (B,S,H,P); pads S to a chunk multiple internally."""
+    s = r.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        r, k, v = (jnp.pad(t, [(0, 0), (0, pad), (0, 0), (0, 0)])
+                   for t in (r, k, v))
+        wlog = jnp.pad(wlog, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    o, s_end = _wkv6(r, k, v, wlog, u, s0, chunk=chunk,
+                     interpret=_auto_interpret(interpret))
+    return o[:, :s], s_end
+
+
+def fused_rmsnorm(x, scale, *, eps=1e-6, interpret=None):
+    return _rmsnorm(x, scale, eps=eps,
+                    interpret=_auto_interpret(interpret))

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def ref_attention(q, k, v, *, causal=True, window=0):
+    """Exact softmax attention. q (B,H,S,D), k/v (B,KH,T,D), GQA internal.
+    window: 0 = full; >0 = sliding window (q_pos - k_pos < window)."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= (qp - kp) < window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w.astype(v.dtype), v)
+    return out.reshape(b, h, s, v.shape[-1])
+
+
+def ref_wkv6(r, k, v, wlog, u, s0):
+    """Sequential (per-step) WKV6 recurrence — the definitional oracle.
+
+    r/k/v/wlog (B,S,H,P); u (H,P); s0 (B,H,P,P).
+      o_t = r_t·(S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1}+k_t^T v_t
+    Returns (o (B,S,H,P), s_end).
+    """
+    f32 = jnp.float32
+    r, k, v, wlog = (x.astype(f32) for x in (r, k, v, wlog))
+    u = u.astype(f32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                     # (B,H,P)
+        o = (jnp.einsum("bhp,bhpq->bhq", rt, S)
+             + jnp.einsum("bhp,hp,bhp,bhq->bhq", rt, u, kt, vt))
+        S = jnp.exp(wt)[..., None] * S + jnp.einsum("bhp,bhq->bhpq", kt, vt)
+        return S, o
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, wlog))
+    s_end, os_ = jax.lax.scan(step, s0.astype(f32), xs)
+    return jnp.moveaxis(os_, 0, 1), s_end
+
+
+def ref_rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf / jnp.sqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,50 @@
+"""Fused RMSNorm Pallas TPU kernel — row-tiled, single HBM pass.
+
+Unfused XLA emits separate reduce + mul passes over (tokens, d_model); the
+fused kernel normalizes and scales one (block_rows, D) VMEM tile per grid
+step. Trivial but hot: it runs 2·L times per transformer step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = ((x / jnp.sqrt(var + eps))
+                  * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def fused_rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret=False):
+    """x (..., D) -> rmsnorm(x) * scale, fused."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for dim in x.shape[:-1]:
+        rows *= dim
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)

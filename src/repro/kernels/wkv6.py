@@ -1,0 +1,120 @@
+"""WKV6 (RWKV6 recurrence) Pallas TPU kernel — chunked matmul form.
+
+TPU adaptation (DESIGN.md §6): the reference CUDA wkv6 kernel serializes one
+thread per channel over the whole sequence; here each (batch, head) runs a
+sequential grid axis over chunks, carrying the (P, P) state in VMEM scratch,
+while the intra-chunk work is two MXU matmuls + one VPU pairwise-decay
+contraction. The pairwise decay exp(L_{t-1} - L_j) <= 1 for j < t, so the
+kernel is fp32-overflow-safe under arbitrarily strong decay (unlike the
+factored r·e^L / k·e^-L formulation).
+
+Layout: r/k/v/wlog rearranged to (B, H, NC, CS, P) by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+            o_ref, s_out_ref, state_scr, *, chunk, num_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0, 0].astype(jnp.float32)         # (cs, P)
+    k = k_ref[0, 0, 0].astype(jnp.float32)
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+    w = w_ref[0, 0, 0].astype(jnp.float32)         # log-decay, <= 0
+    u = u_ref[0].astype(jnp.float32)               # (P,)
+
+    L = jnp.cumsum(w, axis=0)                      # inclusive
+    lprev = L - w
+    state = state_scr[...]
+
+    # carried-state contribution
+    o = jax.lax.dot(r * jnp.exp(lprev), state,
+                    preferred_element_type=jnp.float32)
+
+    # intra-chunk strictly-causal pairwise term (bounded decay <= 1)
+    pair = jnp.exp(jnp.minimum(lprev[:, None, :] - L[None, :, :], 0.0))
+    att = jnp.sum(r[:, None, :] * pair * k[None, :, :], axis=-1)  # (cs, cs)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(j_idx < t_idx, att, 0.0)
+    o = o + jax.lax.dot(att, v, preferred_element_type=jnp.float32)
+
+    # diagonal bonus
+    diag = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)
+    o = o + diag * v
+
+    # state update: S <- diag(e^{L_end}) S + (k ⊙ e^{L_end - L})^T v
+    l_end = L[-1:, :]                              # (1, P)
+    k_adv = k * jnp.exp(l_end - L)
+    state_scr[...] = (jnp.exp(l_end).T * state
+                      + jax.lax.dot(k_adv.T, v,
+                                    preferred_element_type=jnp.float32))
+
+    o_ref[0, 0, 0] = o.astype(o_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _final():
+        s_out_ref[0, 0] = state_scr[...].astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked_kernel(r, k, v, wlog, u, s0, *, chunk=32, interpret=False):
+    """r/k/v/wlog (B, S, H, P); u (H, P); s0 (B, H, P, P).
+    Returns (o (B,S,H,P) f32, s_end (B,H,P,P) f32). S % chunk must be 0
+    (ops.py pads)."""
+    b, s, h, p = r.shape
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+
+    def to_bhncp(x):
+        return x.reshape(b, nc, chunk, h, p).transpose(0, 3, 1, 2, 4)
+
+    rc, kc, vc, wc = map(to_bhncp, (r, k, v, wlog))
+
+    def rkvw_map(bb, hh, ci):
+        return (bb, hh, ci, 0, 0)
+
+    def u_map(bb, hh, ci):
+        return (hh, 0)
+
+    def s0_map(bb, hh, ci):
+        return (bb, hh, 0, 0)
+
+    o, s_end = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, num_chunks=nc),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p), rkvw_map),
+            pl.BlockSpec((1, 1, 1, chunk, p), rkvw_map),
+            pl.BlockSpec((1, 1, 1, chunk, p), rkvw_map),
+            pl.BlockSpec((1, 1, 1, chunk, p), rkvw_map),
+            pl.BlockSpec((1, p), u_map),
+            pl.BlockSpec((1, 1, p, p), s0_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p), rkvw_map),
+            pl.BlockSpec((1, 1, p, p), s0_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, chunk, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(rc, kc, vc, wc, u, s0)
+
+    o = o.transpose(0, 2, 3, 1, 4).reshape(b, s, h, p)
+    return o, s_end

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the training/prefill batch specs;
+decode inputs (token + cache) come from DistributedEngine.abstract_cache.
+Modality frontends are stubbed here per the brief: audio gets precomputed
+conv-extractor frame features, VLM gets patch embeddings + M-RoPE grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    act_dtype = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "audio":
+        return {
+            "features": sds((b, s, cfg.audio_feat_dim), act_dtype),
+            "mask": sds((b, s), jnp.bool_),
+            "labels": sds((b, s), jnp.int32),
+        }
+    if cfg.arch_type == "vlm":
+        return {
+            "tokens": sds((b, s), jnp.int32),
+            "image_embeds": sds((b, cfg.vision_tokens, cfg.d_model),
+                                act_dtype),
+            "positions": sds((b, s, 3), jnp.int32),
+        }
+    if cfg.arch_type == "vit":
+        return {
+            "images": sds((b, cfg.image_size, cfg.image_size, 3),
+                          jnp.float32),
+            "labels": sds((b,), jnp.int32),
+        }
+    return {"tokens": sds((b, s), jnp.int32)}
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0):
+    """Small concrete batch for smoke tests/examples (same structure)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    if cfg.arch_type == "audio":
+        return {
+            "features": jax.random.normal(
+                ks[0], (batch, seq, cfg.audio_feat_dim), jnp.float32),
+            "mask": jax.random.bernoulli(ks[1], 0.2, (batch, seq)),
+            "labels": jax.random.randint(ks[2], (batch, seq), 0,
+                                         cfg.vocab_size),
+        }
+    if cfg.arch_type == "vlm":
+        n_img = min(cfg.vision_tokens, seq // 2)
+        return {
+            "tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                         cfg.vocab_size),
+            "image_embeds": jax.random.normal(
+                ks[1], (batch, n_img, cfg.d_model), jnp.float32),
+        }
+    if cfg.arch_type == "vit":
+        return {
+            "images": jax.random.normal(
+                ks[0], (batch, cfg.image_size, cfg.image_size, 3)),
+            "labels": jax.random.randint(ks[1], (batch,), 0,
+                                         cfg.num_classes),
+        }
+    return {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                         cfg.vocab_size)}

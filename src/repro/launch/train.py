@@ -1,0 +1,131 @@
+"""End-to-end training driver (the paper's workload: DeepSpeed-style DP
+training of a ViT / LM on a mesh).
+
+Single-host usage (this container):
+    PYTHONPATH=src python -m repro.launch.train --arch vit-b16 --smoke \
+        --steps 50 --batch 32 --accum 2 --devices 8
+
+--devices N re-execs with xla_force_host_platform_device_count=N so the dp
+axis is real (the paper's "N GPUs"), which is how the scaling benchmarks
+and multi-device integration tests run on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _maybe_reexec(devices: int):
+    if devices and os.environ.get("_REPRO_REEXEC") != "1":
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+        os.environ["_REPRO_REEXEC"] = "1"
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vit-b16")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--zero", type=int, default=0)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--dataset", default="cifar10")
+    ap.add_argument("--seq-parallel", default="none")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args()
+    _maybe_reexec(args.devices)
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import EngineConfig, get_config, get_smoke_config
+    from repro.core.engine import DistributedEngine
+    from repro.data import DATASETS, DataPipeline
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    if cfg.arch_type == "vit":
+        cfg = cfg.replace(num_classes=DATASETS[args.dataset].num_classes)
+    mesh = make_local_mesh(model=args.model_axis)
+    dp = mesh.devices.shape[0]
+    ecfg = EngineConfig(
+        train_batch_size=args.batch,
+        gradient_accumulation_steps=args.accum,
+        zero_stage=args.zero, optimizer=args.optimizer, lr=args.lr,
+        total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
+        sequence_parallel=args.seq_parallel)
+    eng = DistributedEngine(cfg, ecfg, mesh)
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"devices={mesh.devices.size} dp={dp} "
+          f"micro_batch={ecfg.derived_micro_batch(dp)} accum={args.accum} "
+          f"zero={args.zero} opt={args.optimizer}")
+
+    if cfg.arch_type == "vit":
+        pipe = DataPipeline(kind="image", global_batch=args.batch,
+                            dataset=DATASETS[args.dataset],
+                            resolution=cfg.image_size)
+    else:
+        pipe = DataPipeline(kind="token", global_batch=args.batch,
+                            vocab=max(cfg.vocab_size, 2), seq_len=args.seq,
+                            epoch_size=args.batch * args.steps)
+
+    params, opt_state = eng.init(seed=0)
+    step_fn = eng.jit_train_step()
+    hist = []
+    t0 = time.time()
+    it = iter(pipe.batches())
+    import jax.numpy as jnp
+    with mesh:
+        for step in range(args.steps):
+            try:
+                batch = next(it)
+            except StopIteration:
+                it = iter(pipe.batches(epoch=step))
+                batch = next(it)
+            if cfg.arch_type == "audio":
+                from repro.launch.specs import concrete_batch
+                batch = concrete_batch(cfg, args.batch, args.seq, seed=step)
+            if cfg.arch_type == "vlm":
+                from repro.launch.specs import concrete_batch
+                batch = concrete_batch(cfg, args.batch, args.seq, seed=step)
+            batch = jax.tree.map(jnp.asarray, batch)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.int32(step))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = round(time.time() - t0, 2)
+                hist.append(m)
+                print(f"[train] step {step:5d} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
+                      f"({m['wall_s']:.1f}s)")
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.steps,
+                               {"params": params})
+        print(f"[train] checkpoint -> {path}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(hist, f, indent=1)
+    # final sanity: loss decreased
+    if len(hist) >= 2 and not (hist[-1]["loss"] < hist[0]["loss"]):
+        print("[train] WARNING: loss did not decrease")
+    print(f"[train] done in {time.time()-t0:.1f}s; "
+          f"final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

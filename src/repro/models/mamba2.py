@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) block — chunked matmul-form scan, TPU/MXU-adapted.
+
+The CUDA Mamba2 kernel is a warp-specialized selective scan; the TPU-native
+adaptation (per DESIGN.md §3) is the *chunked SSD* form: within a chunk the
+recurrence is a causal-masked matmul (MXU work), across chunks a short
+``lax.scan`` carries the (H, P, N) state. Chunk size = cfg.ssm.chunk_size.
+
+Recurrence (per head h, state (P, N)):
+    h_t = a_t * h_{t-1} + dt_t * x_t B_t^T ;    y_t = h_t C_t + D * x_t
+with a_t = exp(dt_t * A), A = -exp(A_log), dt_t = softplus(dt_raw + bias).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.norms import rmsnorm
+from repro.models.params import dense_init, zeros
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return d_in, nheads, conv_ch
+
+
+def init_mamba2(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nheads, conv_ch = dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z | x | B | C | dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_in + 2 * s.state_dim + nheads)),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, conv_ch), scale=0.3),
+        "conv_b": zeros((conv_ch,)),
+        "A_log": jnp.zeros((nheads,)),            # A = -exp(0) = -1
+        "dt_bias": jnp.full((nheads,), 0.5),
+        "D": jnp.ones((nheads,)),
+        "norm": jnp.ones((d_in,)),
+        "w_out": dense_init(ks[3], (d_in, d)),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_in, nheads, _ = dims(cfg)
+    n = s.state_dim
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: 2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d. xbc (B,S,C); conv_state (B,k-1,C) or None.
+    Returns (out (B,S,C), new_state (B,k-1,C))."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros(xbc.shape[:1] + (k - 1, xbc.shape[-1]),
+                               xbc.dtype)
+    full = jnp.concatenate([conv_state, xbc], axis=1)        # (B,k-1+S,C)
+    out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(k))
+    out = jax.nn.silu(out + conv_b.astype(xbc.dtype))
+    new_state = full[:, -(k - 1):]
+    return out, new_state
+
+
+def _ssd_chunk_scan(xh, bmat, cmat, dt, a_log, chunk, h0):
+    """Chunked SSD.
+
+    xh (B,S,H,P) head inputs; bmat/cmat (B,S,N); dt (B,S,H) post-softplus;
+    h0 (B,H,P,N) initial state. Returns (y (B,S,H,P), h_end).
+    All math fp32.
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    s_orig = s
+    pad = (-s) % chunk
+    if pad:
+        # zero-pad: dtx=0 leaves the state untouched, and padded log-decay is
+        # forced to 0 below so the carried state is not spuriously decayed.
+        xh, bmat, cmat, dt = (jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] *
+                                      (t.ndim - 2)) for t in
+                              (xh, bmat, cmat, dt))
+        s = s + pad
+    nc = s // chunk
+
+    f32 = jnp.float32
+    xh, bmat, cmat, dt = (t.astype(f32) for t in (xh, bmat, cmat, dt))
+    A = -jnp.exp(a_log.astype(f32))                          # (H,)
+    la = dt * A                                              # log a_t (B,S,H)
+    if pad:
+        valid = (jnp.arange(s) < s_orig)[None, :, None]
+        la = jnp.where(valid, la, 0.0)
+        dt = jnp.where(valid, dt, 0.0)
+
+    def chunked(t, trail):
+        return t.reshape((b, nc, chunk) + trail)
+
+    xh_c = chunked(xh, (h, p))
+    b_c = chunked(bmat, (n,))
+    c_c = chunked(cmat, (n,))
+    dt_c = chunked(dt, (h,))
+    la_c = chunked(la, (h,))
+
+    # move chunk axis to front for scan: (nc, B, chunk, ...)
+    xh_c, b_c, c_c, dt_c, la_c = (
+        jnp.moveaxis(t, 1, 0) for t in (xh_c, b_c, c_c, dt_c, la_c))
+
+    def body(h_in, inp):
+        xk, bk, ck, dtk, lak = inp                # (B,chunk,...)
+        L = jnp.cumsum(lak, axis=1)               # (B,chunk,H) inclusive
+        dtx = xk * dtk[..., None]                 # (B,chunk,H,P)
+
+        # intra-chunk: M[i,j] = (C_i·B_j) exp(L_i - L_j) [j<=i]
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)   # (B,chunk,chunk)
+        decay = jnp.exp(L[:, :, None, :] - L[:, None, :, :])   # (B,i,j,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(causal[None, :, :, None], cb[..., None] * decay, 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", m, dtx)
+
+        # contribution of incoming state
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", ck, h_in, jnp.exp(L))
+
+        # state update: h_out = exp(L_end) h_in + sum_j exp(L_end-L_j) dtx B^T
+        l_end = L[:, -1]                          # (B,H)
+        w = jnp.exp(l_end[:, None] - L)           # (B,chunk,H)
+        h_out = (jnp.exp(l_end)[..., None, None] * h_in
+                 + jnp.einsum("bjh,bjhp,bjn->bhpn", w, dtx, bk))
+        return h_out, y
+
+    # checkpoint: recompute the (chunk,chunk) decay/causal tensors in
+    # backward rather than saving them per chunk (see rwkv6 note)
+    h_end, ys = jax.lax.scan(jax.checkpoint(body), h0.astype(f32),
+                             (xh_c, b_c, c_c, dt_c, la_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)[:, :s_orig]
+    return y, h_end
+
+
+def mamba2_block(p, x, cfg, *, cache=None):
+    """x (B,S,D). cache: {"conv": (B,k-1,C), "ssd": (B,H,P,N)} or None.
+    Returns (out (B,S,D), new_cache)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in, nheads, conv_ch = dims(cfg)
+    n, pdim = s_cfg.state_dim, s_cfg.head_dim
+
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+
+    xc = xbc[..., :d_in].reshape(b, s, nheads, pdim)
+    bmat = xbc[..., d_in:d_in + n]
+    cmat = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    h0 = (cache["ssd"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((b, nheads, pdim, n), jnp.float32))
+
+    if s == 1 and cache is not None:
+        # decode: one recurrence step, no chunking
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        a = jnp.exp(dt[:, 0] * A)                             # (B,H)
+        dtx = (xc[:, 0].astype(jnp.float32) * dt[:, 0, :, None])
+        h_end = (a[..., None, None] * h0
+                 + jnp.einsum("bhp,bn->bhpn", dtx, bmat[:, 0].astype(
+                     jnp.float32)))
+        y = jnp.einsum("bhpn,bn->bhp", h_end, cmat[:, 0].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        y, h_end = _ssd_chunk_scan(xc, bmat, cmat, dt, p["A_log"],
+                                   min(s_cfg.chunk_size, s), h0)
+
+    y = y + p["D"].astype(jnp.float32)[:, None] * xc.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssd": h_end.astype(cache["ssd"].dtype)}
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in, nheads, conv_ch = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), dtype),
+    }

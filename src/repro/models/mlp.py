@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU / squared-ReLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import dense_init, zeros
+
+
+def is_gated(act: str) -> bool:
+    return act in ("swiglu", "geglu")
+
+
+def init_mlp(key, d_model, d_ff, act, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_out": dense_init(ks[2], (d_ff, d_model), dtype)}
+    if is_gated(act):
+        p["w_gate"] = dense_init(ks[0], (d_model, d_ff), dtype)
+        p["w_up"] = dense_init(ks[1], (d_model, d_ff), dtype)
+    else:
+        p["w_up"] = dense_init(ks[1], (d_model, d_ff), dtype)
+        p["b_up"] = zeros((d_ff,), dtype)
+        p["b_out"] = zeros((d_model,), dtype)
+    return p
+
+
+def _act(h, act):
+    if act in ("swiglu",):
+        return jax.nn.silu(h)
+    if act in ("geglu", "gelu"):
+        return jax.nn.gelu(h)
+    if act == "sqrelu":
+        return jnp.square(jax.nn.relu(h))
+    raise ValueError(act)
+
+
+def mlp(p, x, act):
+    if is_gated(act):
+        h = _act(x @ p["w_gate"].astype(x.dtype), act) * (
+            x @ p["w_up"].astype(x.dtype))
+        return h @ p["w_out"].astype(x.dtype)
+    h = _act(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype), act)
+    return h @ p["w_out"].astype(x.dtype) + p["b_out"].astype(x.dtype)

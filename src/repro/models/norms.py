@@ -1,0 +1,32 @@
+"""RMSNorm / LayerNorm / per-head GroupNorm (pure-jnp; the Pallas variant in
+repro.kernels.rmsnorm is swapped in when cfg.use_pallas)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf / jnp.sqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) / jnp.sqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm_heads(x, scale, bias, eps):
+    """Per-head group norm, x (B, S, H, P), scale/bias (H*P,)."""
+    b, s, h, p = x.shape
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = ((xf - mu) / jnp.sqrt(var + eps)).reshape(b, s, h * p)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.reshape(b, s, h, p).astype(x.dtype)

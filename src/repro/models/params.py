@@ -1,0 +1,65 @@
+"""Parameter initialization helpers + analytic parameter counting."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale=None):
+    """Truncated-normal fan-in init (what ViT/LLM stacks actually use)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return 0.02 * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def stack_layer_params(init_one, num_layers, key):
+    """Initialize ``num_layers`` independent copies of a per-layer param tree
+    and stack along a leading layer axis (scan-over-layers layout)."""
+    keys = jax.random.split(key, num_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def tree_num_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    """Parameter count via ``jax.eval_shape`` over the real initializer —
+    guaranteed consistent with the model actually built.
+
+    ``active_only``: MoE experts counted at top_k/num_experts utilization
+    (the 6·N_active·D convention for MoE MODEL_FLOPS).
+    """
+    from repro.models.transformer import init_params
+
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = tree_num_params(shapes)
+    if not active_only or cfg.moe is None or cfg.moe.num_experts == 0:
+        return total
+
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    routed = sum(int(np.prod(leaf.shape)) for path, leaf in flat
+                 if "experts" in jax.tree_util.keystr(path))
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - routed + routed * frac)

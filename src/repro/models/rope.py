@@ -1,0 +1,68 @@
+"""Rotary position embeddings: full, half (GLM 2d), M-RoPE (Qwen2-VL)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rope_angles(positions, dim, theta):
+    """positions (..., ) -> angles (..., dim//2) in float32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def _rotate(x, cos, sin):
+    """Rotate-half convention. x (..., d); cos/sin (..., d//2)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def mrope_angles(positions, dim, theta, sections):
+    """M-RoPE: positions (B, S, 3) = (t, h, w) grids; each frequency band is
+    assigned to one section. Returns angles (B, S, dim//2)."""
+    n = dim // 2
+    t, h, w = sections
+    assert t + h + w == n, (sections, n)
+    sec_ids = jnp.concatenate([
+        jnp.zeros((t,), jnp.int32), jnp.ones((h,), jnp.int32),
+        2 * jnp.ones((w,), jnp.int32)])
+    pos = positions.astype(jnp.float32)[..., sec_ids]          # (B, S, n)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return pos * inv_freq
+
+
+def apply_rope(q, k, positions, *, style, theta, sections=(0, 0, 0)):
+    """q (B,S,H,hd), k (B,T,KH,hd). positions: (B,S) int32 or (B,S,3) for
+    mrope. q and k must share position arrays of matching leading shape —
+    pass (q_pos, k_pos) tuple when they differ (decode)."""
+    if style == "none":
+        return q, k
+    q_pos, k_pos = positions if isinstance(positions, tuple) else (positions,
+                                                                   positions)
+    hd = q.shape[-1]
+    if style == "mrope":
+        ang_q = mrope_angles(q_pos, hd, theta, sections)
+        ang_k = mrope_angles(k_pos, hd, theta, sections)
+        cos_q, sin_q = jnp.cos(ang_q)[:, :, None], jnp.sin(ang_q)[:, :, None]
+        cos_k, sin_k = jnp.cos(ang_k)[:, :, None], jnp.sin(ang_k)[:, :, None]
+        return (_rotate(q, cos_q, sin_q).astype(q.dtype),
+                _rotate(k, cos_k, sin_k).astype(k.dtype))
+
+    rot_dim = hd if style == "full" else hd // 2
+    ang_q = _rope_angles(q_pos, rot_dim, theta)[:, :, None]   # (B,S,1,rd/2)
+    ang_k = _rope_angles(k_pos, rot_dim, theta)[:, :, None]
+
+    def _apply(x, ang):
+        cos, sin = jnp.cos(ang), jnp.sin(ang)
+        if rot_dim == hd:
+            return _rotate(x, cos, sin)
+        head, tail = x[..., :rot_dim], x[..., rot_dim:]
+        return jnp.concatenate([_rotate(head, cos, sin), tail], -1)
+
+    return _apply(q, ang_q).astype(q.dtype), _apply(k, ang_k).astype(k.dtype)
+
+
+def apply_rope_1d(x, positions, *, theta):
+    """RoPE for a single (B,S,1,rd) stream (MLA shared rope-key)."""
+    ang = _rope_angles(positions, x.shape[-1], theta)[:, :, None]
+    return _rotate(x, jnp.cos(ang), jnp.sin(ang)).astype(x.dtype)

@@ -1,0 +1,232 @@
+"""RWKV6 "Finch" block — data-dependent decay WKV recurrence + token shift.
+[arXiv:2404.05892]
+
+TPU adaptation (DESIGN.md §3): the reference CUDA wkv6 kernel runs one thread
+per channel serially over time; here the recurrence is evaluated in *chunked
+matmul form* (intra-chunk causal matmuls on the MXU, inter-chunk lax.scan
+carry), mirroring the mamba2 SSD treatment. A Pallas kernel of the chunk body
+lives in repro.kernels.wkv6.
+
+Per head (state S is (P_k, P_v), P = head_size):
+    o_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+with per-channel data-dependent decay w_t = exp(-exp(wlog_t)) ∈ (0,1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.norms import groupnorm_heads
+from repro.models.params import dense_init, zeros
+
+MIX_STREAMS = 5   # r, k, v, w, g
+
+
+def init_rwkv6(key, cfg):
+    d = cfg.d_model
+    lo = cfg.ssm.decay_lora
+    ks = jax.random.split(key, 12)
+    h, p = cfg.num_heads, cfg.head_dim
+    return {
+        # token-shift ddlerp
+        "mu_base": zeros((d,)),
+        "mu": zeros((MIX_STREAMS, d)),
+        "lora_w1": dense_init(ks[0], (d, MIX_STREAMS * 32), scale=0.01),
+        "lora_w2": dense_init(ks[1], (MIX_STREAMS, 32, d), scale=0.01),
+        # projections
+        "w_r": dense_init(ks[2], (d, h * p)),
+        "w_k": dense_init(ks[3], (d, h * p)),
+        "w_v": dense_init(ks[4], (d, h * p)),
+        "w_g": dense_init(ks[5], (d, h * p)),
+        # data-dependent decay lora + per-channel bonus
+        "decay_base": jnp.full((h * p,), -0.6),
+        "decay_w1": dense_init(ks[6], (d, lo), scale=0.01),
+        "decay_w2": dense_init(ks[7], (lo, h * p), scale=0.01),
+        "bonus_u": dense_init(ks[8], (h, p), scale=0.3),
+        # output
+        "ln_scale": jnp.ones((h * p,)),
+        "ln_bias": zeros((h * p,)),
+        "w_o": dense_init(ks[9], (h * p, d)),
+    }
+
+
+def init_rwkv6_channel_mix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": zeros((d,)),
+        "mu_r": zeros((d,)),
+        "w_k": dense_init(ks[0], (d, f)),
+        "w_v": dense_init(ks[1], (f, d)),
+        "w_r": dense_init(ks[2], (d, d)),
+    }
+
+
+def _token_shift(x, last):
+    """last (B, D) = x_{-1} from previous segment. Returns shifted x."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """RWKV6 data-dependent lerp -> the 5 mixed streams (B,S,5,D)."""
+    delta = xx - x
+    base = x + delta * p["mu_base"].astype(x.dtype)
+    b, s, d = x.shape
+    lora = jnp.tanh(base @ p["lora_w1"].astype(x.dtype))
+    lora = lora.reshape(b, s, MIX_STREAMS, -1)
+    lora = jnp.einsum("bsml,mld->bsmd", lora, p["lora_w2"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype)[None, None] + lora
+    return x[:, :, None] + delta[:, :, None] * mix
+
+
+def wkv6_chunked(r, k, v, wlog, u, chunk, s0):
+    """Chunked WKV6. r/k/v (B,S,H,P); wlog (B,S,H,P) = log decay (negative);
+    u (H,P); s0 (B,H,P,P). Returns (o (B,S,H,P), s_end). fp32 math.
+
+    Within a chunk, with cumulative log-decay L_t = sum_{j<=t} wlog_j:
+      o_t = (r_t ⊙ e^{L_{t-1}}) S_0 + Σ_{j<t} [(r_t ⊙ e^{L_{t-1}-L_j})·k_j] v_j
+            + (r_t·(u ⊙ k_t)) v_t
+      S_c = diag(e^{L_c}) S_0 + Σ_j (e^{L_c-L_j} ⊙ k_j)^T v_j
+    """
+    b, s, h, p = r.shape
+    s_orig = s
+    pad = (-s) % chunk
+    if pad:
+        # zero-pad r/k/v and force log-decay 0 on padded steps: the state is
+        # neither updated (k=0) nor decayed (w=1) past the true length.
+        r, k, v = (jnp.pad(t, [(0, 0), (0, pad), (0, 0), (0, 0)])
+                   for t in (r, k, v))
+        wlog = jnp.pad(wlog, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        s = s + pad
+    nc = s // chunk
+    f32 = jnp.float32
+    r, k, v, wlog = (t.astype(f32) for t in (r, k, v, wlog))
+    u = u.astype(f32)
+
+    def chunked(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, h, p), 1, 0)
+
+    rc, kc, vc, wc = map(chunked, (r, k, v, wlog))
+
+    def body(s_in, inp):
+        rk, kk, vk, wk = inp                       # (B,chunk,H,P)
+        L = jnp.cumsum(wk, axis=1)                 # inclusive
+        Lprev = L - wk                             # L_{t-1}
+        r_dec = rk * jnp.exp(Lprev)                # query decayed to chunk 0
+
+        # state contribution
+        o = jnp.einsum("bthp,bhpq->bthq", r_dec, s_in)
+        # intra-chunk, strictly causal (j < t). The pairwise per-channel
+        # decay exp(L_{t-1} - L_j) is <= 1 for j < t, so — unlike the
+        # factored r*e^{L} @ k*e^{-L} form — it cannot overflow fp32 under
+        # strong decay. Clip masks the (t<=j) upper triangle pre-exp.
+        # min(.,0) (not clip): for j<t the diff is already <= 0; the upper
+        # bound only guards exp overflow in the masked j>=t triangle. exp
+        # underflow needs no lower clamp, and minimum has a cheaper VJP
+        # (one select vs clip's two) — this tensor is the §Perf hot spot.
+        pair = jnp.exp(jnp.minimum(Lprev[:, :, None] - L[:, None], 0.0))
+        att = jnp.einsum("bthp,btjhp,bjhp->bhtj", rk, pair, kk)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(causal[None, None], att, 0.0)
+        o = o + jnp.einsum("bhtj,bjhq->bthq", att, vk)
+        # diagonal bonus term
+        diag = jnp.einsum("bthp,hp,bthp->bth", rk, u, kk)
+        o = o + diag[..., None] * vk
+
+        l_end = L[:, -1]                           # (B,H,P)
+        s_out = (jnp.exp(l_end)[..., None] * s_in
+                 + jnp.einsum("bjhp,bjhq->bhpq", kk * jnp.exp(
+                     l_end[:, None] - L), vk))
+        return s_out, o
+
+    # checkpoint the chunk body: the (chunk,chunk,P) pairwise-decay tensor
+    # is recomputed in backward instead of being stacked as a per-chunk
+    # residual — without this, backward residuals cost O(S·chunk·H·P) HBM
+    # per layer (the dominant §Perf memory term for rwkv6 training).
+    s_end, os_ = jax.lax.scan(jax.checkpoint(body), s0.astype(f32),
+                              (rc, kc, vc, wc))
+    o = jnp.moveaxis(os_, 0, 1).reshape(b, s, h, p)[:, :s_orig]
+    return o, s_end
+
+
+def rwkv6_time_mix(p, x, cfg, *, cache=None):
+    """x (B,S,D). cache {"shift": (B,D), "wkv": (B,H,P,P)} or None.
+    Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, pd = cfg.num_heads, cfg.head_dim
+    last = cache["shift"].astype(x.dtype) if cache is not None else \
+        jnp.zeros((b, d), x.dtype)
+    xx = _token_shift(x, last)
+    xr, xk, xv, xw, xg = [t[:, :, 0] for t in jnp.split(
+        _ddlerp(p, x, xx), MIX_STREAMS, axis=2)]
+
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(b, s, h, pd)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(b, s, h, pd)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(b, s, h, pd)
+    g = xg @ p["w_g"].astype(x.dtype)
+
+    wraw = p["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32))
+        @ p["decay_w2"].astype(jnp.float32))
+    wlog = -jnp.exp(wraw).reshape(b, s, h, pd)      # log decay, < 0
+
+    s0 = (cache["wkv"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((b, h, pd, pd), jnp.float32))
+
+    if s == 1 and cache is not None:
+        r1, k1, v1 = r[:, 0], k[:, 0], v[:, 0]
+        o = (jnp.einsum("bhp,bhpq->bhq", r1.astype(jnp.float32), s0)
+             + jnp.einsum("bhp,hp,bhp,bhq->bhq",
+                          r1.astype(jnp.float32), p["bonus_u"].astype(
+                              jnp.float32),
+                          k1.astype(jnp.float32), v1.astype(jnp.float32)))
+        s_end = (jnp.exp(wlog[:, 0])[..., None] * s0
+                 + jnp.einsum("bhp,bhq->bhpq", k1.astype(jnp.float32),
+                              v1.astype(jnp.float32)))
+        o = o[:, None]
+    elif cfg.use_pallas:
+        from repro.kernels.ops import wkv6 as wkv6_op
+        chunk = min(cfg.ssm.chunk_size, 32)     # VMEM pairwise tile bound
+        o, s_end = wkv6_op(r, k, v, wlog, p["bonus_u"], s0, chunk=chunk)
+    else:
+        chunk = min(cfg.ssm.chunk_size, s)
+        o, s_end = wkv6_chunked(r, k, v, wlog, p["bonus_u"], chunk, s0)
+
+    o = groupnorm_heads(o.astype(x.dtype), p["ln_scale"], p["ln_bias"],
+                        cfg.norm_eps)
+    o = (o.reshape(b, s, h * pd) * jax.nn.silu(g))
+    out = o @ p["w_o"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": x[:, -1].astype(cache["shift"].dtype),
+                     "wkv": s_end.astype(cache["wkv"].dtype)}
+    return out, new_cache
+
+
+def rwkv6_channel_mix(p, x, cfg, *, cache=None):
+    """cache {"shift": (B,D)}. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    last = cache["shift"].astype(x.dtype) if cache is not None else \
+        jnp.zeros((b, d), x.dtype)
+    xx = _token_shift(x, last)
+    delta = xx - x
+    xk = x + delta * p["mu_k"].astype(x.dtype)
+    xr = x + delta * p["mu_r"].astype(x.dtype)
+    hidden = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype)) * (
+        hidden @ p["w_v"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": x[:, -1].astype(cache["shift"].dtype)}
+    return out, new_cache
+
+
+def init_rwkv6_cache(cfg, batch, dtype=jnp.float32):
+    h, pd, d = cfg.num_heads, cfg.head_dim, cfg.d_model
+    return {
+        "att_shift": jnp.zeros((batch, d), dtype),
+        "ffn_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, pd, pd), dtype),
+    }

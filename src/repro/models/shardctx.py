@@ -1,0 +1,62 @@
+"""Activation-sharding context.
+
+The engine/launcher installs PartitionSpec hints here; model code applies them
+via ``with_sharding_constraint`` when running under a mesh. This is how
+DeepSpeed-Ulysses sequence parallelism is expressed TPU-natively: activations
+constrained to sequence-sharded before attention, head-sharded inside it —
+GSPMD lowers the respecting reshard to the same all_to_all pair the paper's
+reference (arXiv:2309.14509) issues explicitly.
+
+Models never import repro.core, so this lives under models/.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+
+@dataclass
+class ShardHints:
+    # (B, S, D) activations between blocks
+    act: Optional[jax.sharding.PartitionSpec] = None
+    # (B, S, H, hd) queries INSIDE attention
+    attn_q: Optional[jax.sharding.PartitionSpec] = None
+    # (B, T, KH, hd) keys/values INSIDE attention — may differ from attn_q
+    # when num_kv_heads doesn't divide the model axis (GQA kv=2/8 on a
+    # 16-way axis): padded shardings caused per-k-block all-gather storms
+    attn_kv: Optional[jax.sharding.PartitionSpec] = None
+    # (B, S, H, hd) attention output
+    attn_seq: Optional[jax.sharding.PartitionSpec] = None
+    # (E, ...) expert-parallel leading axis for MoE intermediate tensors
+    expert: Optional[str] = None   # mesh axis name for expert parallelism
+
+
+_HINTS = ShardHints()
+
+
+def get() -> ShardHints:
+    return _HINTS
+
+
+@contextlib.contextmanager
+def use(hints: ShardHints):
+    global _HINTS
+    prev, _HINTS = _HINTS, hints
+    try:
+        yield
+    finally:
+        _HINTS = prev
+
+
+def constrain(x, spec):
+    """with_sharding_constraint if a spec is installed, else identity."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        # no mesh context (single-device tests): hints are advisory
+        return x

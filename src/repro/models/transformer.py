@@ -1,0 +1,568 @@
+"""Generic multi-architecture transformer: init / forward / cache / loss.
+
+One scan-over-layers decoder/encoder covering all assigned architectures:
+  dense (qwen2.5, glm4, chatglm3, gemma3-windowed), moe (granite, deepseek
+  MLA+shared-expert+MTP), vlm (qwen2-vl M-RoPE, stubbed vision frontend),
+  audio (hubert encoder-only, stubbed conv frontend), hybrid (zamba2
+  mamba2+shared-attn groups), ssm (rwkv6), vit (the paper's ViT-B/16).
+
+Layer parameters are stacked along a leading L axis and consumed by
+``jax.lax.scan`` — essential to keep HLO size and compile time tractable at
+512 devices (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rk
+from repro.models.attention import attention_block, init_attention, init_mla, \
+    mla_block
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_gather
+from repro.models.norms import layernorm, rmsnorm
+from repro.models.params import dense_init, embed_init, stack_layer_params, \
+    zeros
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def _norm_kind(cfg) -> str:
+    return "ln" if cfg.arch_type in ("audio", "vit") else "rms"
+
+
+def _init_norm(cfg):
+    d = cfg.d_model
+    p = {"scale": jnp.ones((d,))}
+    if _norm_kind(cfg) == "ln":
+        p["bias"] = zeros((d,))
+    return p
+
+
+def _apply_norm(cfg, p, x):
+    if _norm_kind(cfg) == "ln":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(cfg, use_moe):
+    def init_one(key):
+        ks = jax.random.split(key, 2)
+        p = {"ln1": _init_norm(cfg), "ln2": _init_norm(cfg)}
+        if cfg.block_kind == "mla":
+            p["attn"] = init_mla(ks[0], cfg)
+        else:
+            p["attn"] = init_attention(ks[0], cfg)
+        if use_moe:
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+        return p
+    return init_one
+
+
+def _init_rwkv_layer(cfg):
+    def init_one(key):
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": _init_norm(cfg), "ln2": _init_norm(cfg),
+            "time_mix": rk.init_rwkv6(ks[0], cfg),
+            "channel_mix": rk.init_rwkv6_channel_mix(ks[1], cfg),
+        }
+    return init_one
+
+
+def _init_mamba_layer(cfg):
+    def init_one(key):
+        return {"ln": _init_norm(cfg), "mamba": m2.init_mamba2(key, cfg)}
+    return init_one
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key):
+    keys = jax.random.split(key, 8)
+    params = {}
+
+    # ---- embeddings ----
+    if cfg.arch_type == "vit":
+        n_patch = (cfg.image_size // cfg.patch_size) ** 2
+        params["embed"] = {
+            "patch_w": dense_init(
+                keys[0], (cfg.patch_size * cfg.patch_size * 3, cfg.d_model)),
+            "patch_b": zeros((cfg.d_model,)),
+            "cls": zeros((1, 1, cfg.d_model)),
+            "pos": embed_init(keys[5], (n_patch + 1, cfg.d_model)),
+        }
+    elif cfg.arch_type == "audio":
+        params["embed"] = {
+            "feat_proj": dense_init(keys[0], (cfg.audio_feat_dim,
+                                              cfg.d_model)),
+            "feat_b": zeros((cfg.d_model,)),
+            "mask_emb": embed_init(keys[5], (cfg.d_model,)),
+        }
+    else:
+        params["embed"] = {"tok": embed_init(keys[0], (cfg.vocab_size,
+                                                       cfg.d_model))}
+
+    # ---- blocks ----
+    moe_cfg = cfg.moe
+    if cfg.block_kind in ("attn", "mla"):
+        if moe_cfg and moe_cfg.num_experts > 0:
+            nd = moe_cfg.first_dense_layers
+            if nd > 0:
+                params["dense_stack"] = stack_layer_params(
+                    _init_attn_layer(cfg, use_moe=False), nd, keys[1])
+            params["moe_stack"] = stack_layer_params(
+                _init_attn_layer(cfg, use_moe=True),
+                cfg.num_layers - nd, keys[2])
+        else:
+            params["stack"] = stack_layer_params(
+                _init_attn_layer(cfg, use_moe=False), cfg.num_layers, keys[1])
+    elif cfg.block_kind == "rwkv6":
+        params["stack"] = stack_layer_params(
+            _init_rwkv_layer(cfg), cfg.num_layers, keys[1])
+    elif cfg.block_kind == "mamba2":
+        params["stack"] = stack_layer_params(
+            _init_mamba_layer(cfg), cfg.num_layers, keys[1])
+        if cfg.hybrid_group > 0:
+            # zamba2: ONE weight-shared attention(+mlp) block
+            shared = _init_attn_layer(cfg, use_moe=False)(keys[2])
+            params["shared_attn"] = shared
+    else:
+        raise ValueError(cfg.block_kind)
+
+    # ---- head ----
+    params["final_norm"] = _init_norm(cfg)
+    if cfg.arch_type == "vit":
+        params["head"] = {"w": dense_init(keys[3], (cfg.d_model,
+                                                    cfg.num_classes)),
+                          "b": zeros((cfg.num_classes,))}
+    elif not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(keys[3], (cfg.d_model,
+                                                    cfg.vocab_size))}
+
+    # ---- MTP (deepseek-v3) ----
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "proj": dense_init(keys[4], (2 * cfg.d_model, cfg.d_model)),
+            "block": _init_attn_layer(cfg, use_moe=False)(keys[6]),
+            "norm_h": _init_norm(cfg), "norm_e": _init_norm(cfg),
+            "final_norm": _init_norm(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _attn_layer_cache(cfg, batch, max_len, dtype):
+    if cfg.block_kind == "mla":
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim),
+                                    dtype)}
+    return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype)}
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    """Concrete zero cache. Use jax.eval_shape(...) for dry-run specs."""
+    def stack(fn, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *([fn()] * n)) \
+            if n > 1 else jax.tree.map(lambda x: x[None], fn())
+
+    if cfg.block_kind in ("attn", "mla"):
+        per = lambda: _attn_layer_cache(cfg, batch, max_len, dtype)  # noqa
+        if cfg.moe and cfg.moe.num_experts > 0:
+            nd = cfg.moe.first_dense_layers
+            out = {"moe": stack(per, cfg.num_layers - nd)}
+            if nd > 0:
+                out["dense"] = stack(per, nd)
+            return out
+        return {"layers": stack(per, cfg.num_layers)}
+    if cfg.block_kind == "rwkv6":
+        per = lambda: rk.init_rwkv6_cache(cfg, batch, dtype)  # noqa
+        return {"layers": stack(per, cfg.num_layers)}
+    if cfg.block_kind == "mamba2":
+        per = lambda: m2.init_mamba2_cache(cfg, batch, dtype)  # noqa
+        out = {"mamba": stack(per, cfg.num_layers)}
+        if cfg.hybrid_group > 0:
+            ngroups = cfg.num_layers // cfg.hybrid_group
+            pa = lambda: _attn_layer_cache(cfg, batch, max_len, dtype)  # noqa
+            out["attn"] = stack(pa, ngroups)
+        return out
+    raise ValueError(cfg.block_kind)
+
+
+# ---------------------------------------------------------------------------
+# layer stacks (scan)
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_body(cfg, use_moe, h, lp, window, positions, layer_cache,
+                   cache_index):
+    a_in = _apply_norm(cfg, lp["ln1"], h)
+    if cfg.block_kind == "mla":
+        attn_out, new_c = mla_block(lp["attn"], a_in, cfg,
+                                    positions=positions, cache=layer_cache,
+                                    cache_index=cache_index)
+    else:
+        attn_out, new_c = attention_block(lp["attn"], a_in, cfg,
+                                          positions=positions, window=window,
+                                          cache=layer_cache,
+                                          cache_index=cache_index)
+    h = h + attn_out
+    m_in = _apply_norm(cfg, lp["ln2"], h)
+    if use_moe:
+        moe_fn = moe_ffn_gather if cfg.moe_impl == "gather" else moe_ffn
+        ff, aux = moe_fn(lp["moe"], m_in, cfg)
+    else:
+        ff, aux = mlp(lp["mlp"], m_in, cfg.act), jnp.float32(0.0)
+    return h + ff, new_c, aux
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _run_attn_stack(cfg, stack, h, positions, windows, cache, cache_index,
+                    use_moe):
+    """scan over stacked layers; cache may be None."""
+    has_cache = cache is not None
+
+    def body(carry, xs):
+        lp, window, layer_cache = xs if has_cache else (xs[0], xs[1], None)
+        hh = carry
+        hh, new_c, aux = _attn_mlp_body(cfg, use_moe, hh, lp, window,
+                                        positions, layer_cache, cache_index)
+        return hh, (new_c, aux) if has_cache else aux
+
+    body_fn = _remat(cfg, body)
+    xs = (stack, windows, cache) if has_cache else (stack, windows)
+    h, ys = jax.lax.scan(body_fn, h, xs)
+    if has_cache:
+        new_cache, auxs = ys
+    else:
+        new_cache, auxs = None, ys
+    return h, new_cache, jnp.sum(auxs)
+
+
+def _run_rwkv_stack(cfg, stack, h, cache):
+    has_cache = cache is not None
+
+    def body(carry, xs):
+        lp, layer_cache = xs if has_cache else (xs, None)
+        hh = carry
+        tc = {"shift": layer_cache["att_shift"], "wkv": layer_cache["wkv"]} \
+            if has_cache else None
+        out, new_tc = rk.rwkv6_time_mix(
+            lp["time_mix"], _apply_norm(cfg, lp["ln1"], hh), cfg, cache=tc)
+        hh = hh + out
+        cc = {"shift": layer_cache["ffn_shift"]} if has_cache else None
+        out, new_cc = rk.rwkv6_channel_mix(
+            lp["channel_mix"], _apply_norm(cfg, lp["ln2"], hh), cfg, cache=cc)
+        hh = hh + out
+        new_c = {"att_shift": new_tc["shift"], "wkv": new_tc["wkv"],
+                 "ffn_shift": new_cc["shift"]} if has_cache else None
+        return hh, new_c if has_cache else jnp.float32(0.0)
+
+    body_fn = _remat(cfg, body)
+    xs = (stack, cache) if has_cache else stack
+    h, ys = jax.lax.scan(body_fn, h, xs)
+    return h, (ys if has_cache else None), jnp.float32(0.0)
+
+
+def _run_mamba_stack(cfg, stack, h, cache):
+    has_cache = cache is not None
+
+    def body(carry, xs):
+        lp, lc = xs if has_cache else (xs, None)
+        out, new_lc = m2.mamba2_block(
+            lp["mamba"], _apply_norm(cfg, lp["ln"], carry), cfg, cache=lc)
+        return carry + out, (new_lc if has_cache else jnp.float32(0.0))
+
+    body_fn = _remat(cfg, body)
+    xs = (stack, cache["mamba"]) if has_cache else stack
+    h, ys = jax.lax.scan(body_fn, h, xs)
+    return h, ({"mamba": ys} if has_cache else None), jnp.float32(0.0)
+
+
+def _run_zamba_stack(cfg, params, h, positions, cache, cache_index):
+    """Outer scan over groups of (hybrid_group mamba layers + shared attn)."""
+    g = cfg.hybrid_group
+    ngroups = cfg.num_layers // g
+    has_cache = cache is not None
+    shared = params["shared_attn"]
+
+    group_fn = functools.partial(_group_body, cfg=cfg, shared=shared,
+                                 positions=positions, cache_index=cache_index,
+                                 has_cache=has_cache, g=g)
+    # reshape stacked mamba params (L, ...) -> (ngroups, g, ...)
+    mstack = jax.tree.map(
+        lambda x: x.reshape((ngroups, g) + x.shape[1:]), params["stack"])
+    if has_cache:
+        mcache = jax.tree.map(
+            lambda x: x.reshape((ngroups, g) + x.shape[1:]), cache["mamba"])
+        xs = (mstack, mcache, cache["attn"])
+    else:
+        xs = (mstack,)
+    body = _remat(cfg, group_fn)
+    h, ys = jax.lax.scan(body, h, xs)
+    if has_cache:
+        new_m, new_a = ys
+        new_cache = {"mamba": jax.tree.map(
+            lambda x: x.reshape((ngroups * g,) + x.shape[2:]), new_m),
+            "attn": new_a}
+    else:
+        new_cache = None
+    return h, new_cache, jnp.float32(0.0)
+
+
+def _group_body(carry, xs, *, cfg, shared, positions, cache_index, has_cache,
+                g):
+    h = carry
+    if has_cache:
+        mparams, mcache, acache = xs
+    else:
+        (mparams,), mcache, acache = xs, None, None
+
+    def inner(hh, inner_xs):
+        lp, lc = inner_xs if has_cache else (inner_xs, None)
+        out, new_lc = m2.mamba2_block(
+            lp["mamba"], _apply_norm(cfg, lp["ln"], hh), cfg, cache=lc)
+        return hh + out, new_lc if has_cache else jnp.float32(0.0)
+
+    h, inner_ys = jax.lax.scan(inner, h,
+                               (mparams, mcache) if has_cache else mparams)
+    new_mcache = inner_ys if has_cache else None
+
+    h, new_acache, _ = _attn_mlp_body(
+        cfg, False, h, shared, jnp.int32(0), positions, acache, cache_index)
+    if has_cache:
+        return h, (new_mcache, new_acache)
+    return h, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def _sinusoidal_pos(s, d, offset=0):
+    pos = jnp.arange(offset, offset + s, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d))
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _embed(cfg, params, batch, mode):
+    """Returns h (B,S,D) in cfg.dtype and rope positions."""
+    dtype = jnp.dtype(cfg.dtype)
+    e = params["embed"]
+    if cfg.arch_type == "vit":
+        img = batch["images"]                       # (B, H, W, 3)
+        b = img.shape[0]
+        ps = cfg.patch_size
+        n = cfg.image_size // ps
+        patches = img.reshape(b, n, ps, n, ps, 3).transpose(0, 1, 3, 2, 4, 5)
+        patches = patches.reshape(b, n * n, ps * ps * 3).astype(dtype)
+        h = patches @ e["patch_w"].astype(dtype) + e["patch_b"].astype(dtype)
+        cls = jnp.broadcast_to(e["cls"].astype(dtype), (b, 1, cfg.d_model))
+        h = jnp.concatenate([cls, h], axis=1)
+        h = h + e["pos"].astype(dtype)[None]
+        return h, None
+    if cfg.arch_type == "audio":
+        feats = batch["features"].astype(dtype)     # (B, S, F)
+        h = feats @ e["feat_proj"].astype(dtype) + e["feat_b"].astype(dtype)
+        if "mask" in batch:                         # masked prediction
+            h = jnp.where(batch["mask"][..., None],
+                          e["mask_emb"].astype(dtype)[None, None], h)
+        # conv-positional frontend is stubbed -> sinusoidal absolute
+        h = h + _sinusoidal_pos(h.shape[1], cfg.d_model).astype(dtype)[None]
+        return h, None
+
+    tokens = batch["tokens"] if mode != "decode" else batch["token"]
+    h = params["embed"]["tok"][tokens].astype(dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if cfg.arch_type == "vlm" and mode != "decode" and \
+            "image_embeds" in batch:
+        n_img = batch["image_embeds"].shape[1]
+        h = jnp.concatenate([batch["image_embeds"].astype(dtype),
+                             h[:, n_img:]], axis=1)
+    # rope positions
+    b, s = h.shape[:2]
+    if mode == "decode":
+        idx = batch["index"]                        # scalar int32
+        if cfg.rope_style == "mrope":
+            positions = jnp.broadcast_to(idx, (b, 1, 3)).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(idx, (b, 1)).astype(jnp.int32)
+    elif cfg.rope_style == "mrope":
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.arange(s, dtype=jnp.int32)[None, :, None]
+            positions = jnp.broadcast_to(base, (b, s, 3))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+    return h, positions
+
+
+def _head(cfg, params, h):
+    h = _apply_norm(cfg, params["final_norm"], h)
+    if cfg.arch_type == "vit":
+        cls = h[:, 0]
+        return cls @ params["head"]["w"].astype(h.dtype) + \
+            params["head"]["b"].astype(h.dtype)
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["tok"].T.astype(h.dtype)
+    return h @ params["head"]["w"].astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, batch, *, mode="train", cache=None):
+    """Returns (logits, new_cache, aux) — aux: {"moe_aux", "mtp_logits"}.
+
+    mode: "train" (no cache) | "prefill" (fills cache) | "decode" (one token,
+    batch = {"token": (B,1), "index": scalar}).
+    """
+    assert mode in ("train", "prefill", "decode"), mode
+    if mode != "train":
+        assert cache is not None or mode == "prefill", mode
+    h, positions = _embed(cfg, params, batch, mode)
+    cache_index = batch.get("index", jnp.int32(0)) if mode == "decode" \
+        else jnp.int32(0)
+    aux = {"moe_aux": jnp.float32(0.0)}
+
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    if cfg.block_kind in ("attn", "mla"):
+        layers_cache = cache
+        if cfg.moe and cfg.moe.num_experts > 0:
+            nd = cfg.moe.first_dense_layers
+            new_cache = {}
+            if nd > 0:
+                h, nc, _ = _run_attn_stack(
+                    cfg, params["dense_stack"], h, positions, windows[:nd],
+                    cache["dense"] if cache else None, cache_index,
+                    use_moe=False)
+                if cache:
+                    new_cache["dense"] = nc
+            h, nc, moe_aux = _run_attn_stack(
+                cfg, params["moe_stack"], h, positions, windows[nd:],
+                cache["moe"] if cache else None, cache_index, use_moe=True)
+            if cache:
+                new_cache["moe"] = nc
+            else:
+                new_cache = None
+            aux["moe_aux"] = moe_aux
+        else:
+            h, nc, _ = _run_attn_stack(
+                cfg, params["stack"], h, positions, windows,
+                cache["layers"] if cache else None, cache_index,
+                use_moe=False)
+            new_cache = {"layers": nc} if cache else None
+    elif cfg.block_kind == "rwkv6":
+        h, nc, _ = _run_rwkv_stack(cfg, params["stack"], h,
+                                   cache["layers"] if cache else None)
+        new_cache = {"layers": nc} if cache else None
+    elif cfg.block_kind == "mamba2":
+        if cfg.hybrid_group > 0:
+            h, new_cache, _ = _run_zamba_stack(cfg, params, h, positions,
+                                               cache, cache_index)
+        else:
+            h, new_cache, _ = _run_mamba_stack(cfg, params["stack"], h,
+                                               cache)
+    else:
+        raise ValueError(cfg.block_kind)
+
+    logits = _head(cfg, params, h)
+
+    # ---- MTP auxiliary head (DeepSeek-V3), train mode only ----
+    if cfg.mtp_depth > 0 and mode == "train" and cfg.arch_type != "vit":
+        mp = params["mtp"]
+        tok = batch["tokens"]
+        nxt = jnp.concatenate([tok[:, 1:], tok[:, -1:]], axis=1)
+        e_next = params["embed"]["tok"][nxt].astype(h.dtype)
+        mtp_in = jnp.concatenate([
+            _apply_norm(cfg, mp["norm_h"], h),
+            _apply_norm(cfg, mp["norm_e"], e_next)], axis=-1)
+        mh = mtp_in @ mp["proj"].astype(h.dtype)
+        mh, _, _ = _attn_mlp_body(cfg, False, mh, mp["block"], jnp.int32(0),
+                                  positions, None, jnp.int32(0))
+        mtp_logits = _apply_norm(cfg, mp["final_norm"], mh) @ (
+            params["embed"]["tok"].T.astype(h.dtype)
+            if cfg.tie_embeddings or "head" not in params
+            else params["head"]["w"].astype(h.dtype))
+        aux["mtp_logits"] = mtp_logits
+
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _xent(logits, labels, mask=None):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg, params, batch, *, rng=None):
+    """Scalar training loss + metrics dict, per architecture family."""
+    logits, _, aux = forward(cfg, params, batch, mode="train")
+    metrics = {}
+    if cfg.arch_type == "vit":
+        loss = _xent(logits, batch["labels"])
+        metrics["acc"] = jnp.mean(
+            (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    elif cfg.arch_type == "audio":
+        loss = _xent(logits, batch["labels"], batch["mask"])
+    else:
+        tok = batch["tokens"]
+        mask = jnp.ones(tok.shape, bool).at[:, -1].set(False)
+        if cfg.arch_type == "vlm" and "image_embeds" in batch:
+            n_img = batch["image_embeds"].shape[1]
+            mask &= jnp.arange(tok.shape[1])[None] >= n_img
+        labels = jnp.concatenate([tok[:, 1:], tok[:, -1:]], axis=1)
+        loss = _xent(logits, labels, mask)
+        if "mtp_logits" in aux:
+            l2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+            m2_ = mask.at[:, -2:].set(False)
+            loss = loss + 0.3 * _xent(aux["mtp_logits"], l2, m2_)
+    loss = loss + aux["moe_aux"]
+    metrics["moe_aux"] = aux["moe_aux"]
+    metrics["loss"] = loss
+    return loss, metrics

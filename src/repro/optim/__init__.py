@@ -1,0 +1,3 @@
+from repro.optim.optimizers import make_optimizer  # noqa: F401
+from repro.optim.onebit import make_onebit_optimizer  # noqa: F401
+from repro.optim.schedule import make_schedule  # noqa: F401

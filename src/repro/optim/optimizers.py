@@ -1,0 +1,102 @@
+"""Optimizers: AdamW (paper's default), SGD+momentum and LAMB (the paper's
+future-work items §V), pure JAX, ZeRO-shardable (state mirrors param pytree
+so the same PartitionSpecs apply)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any           # first moment (adamw/lamb) or momentum (sgd)
+    nu: Any           # second moment (adamw/lamb); () for sgd
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params, lr) -> (new_p, state)
+    name: str = ""
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def make_optimizer(name: str, *, weight_decay=0.01, b1=0.9, b2=0.95,
+                   eps=1e-8, momentum=0.9, grad_clip=1.0) -> Optimizer:
+    name = name.lower()
+
+    def init(params):
+        if name == "sgd":
+            return OptState(jnp.zeros((), jnp.int32),
+                            _zeros_like_f32(params), ())
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
+                        _zeros_like_f32(params))
+
+    def update(grads, state, params, lr):
+        if grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = _global_norm(grads)
+        step = state.step + 1
+
+        if name == "sgd":
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.mu, grads)
+            new_p = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32)
+                              - lr * (m + weight_decay
+                                      * p.astype(jnp.float32))
+                              ).astype(p.dtype), params, mu)
+            return new_p, OptState(step, mu, ()), gnorm
+
+        # adam moments (shared by adamw / lamb)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                          * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def adam_dir(m, v, p):
+            return m / bc1 / (jnp.sqrt(v / bc2) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+
+        if name == "adamw":
+            new_p = jax.tree.map(
+                lambda p, m, v: (p.astype(jnp.float32)
+                                 - lr * adam_dir(m, v, p)).astype(p.dtype),
+                params, mu, nu)
+        elif name == "lamb":
+            # layer-wise trust ratio [You et al.; DeepSpeed 1-bit LAMB ref]
+            def lamb_update(p, m, v):
+                u = adam_dir(m, v, p)
+                pn = jnp.linalg.norm(p.astype(jnp.float32))
+                un = jnp.linalg.norm(u)
+                trust = jnp.where((pn > 0) & (un > 0), pn / un, 1.0)
+                return (p.astype(jnp.float32) - lr * trust * u
+                        ).astype(p.dtype)
+            new_p = jax.tree.map(lamb_update, params, mu, nu)
+        else:
+            raise ValueError(f"unknown optimizer {name}")
+        return new_p, OptState(step, mu, nu), gnorm
+
+    return Optimizer(init=init, update=update, name=name)

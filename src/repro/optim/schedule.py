@@ -1,0 +1,25 @@
+"""LR schedules: linear warmup + {cosine, linear, constant} decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1.0) / jnp.maximum(1.0, warmup_steps)
+        frac = (step - warmup_steps) / jnp.maximum(
+            1.0, total_steps - warmup_steps)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        if kind == "cosine":
+            decay = base_lr * (final_frac + (1 - final_frac)
+                               * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        elif kind == "linear":
+            decay = base_lr * (1 - (1 - final_frac) * frac)
+        elif kind == "constant":
+            decay = jnp.full_like(frac, base_lr)
+        else:
+            raise ValueError(kind)
+        return jnp.where(step < warmup_steps, warm, decay)
+    return sched

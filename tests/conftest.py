@@ -1,0 +1,30 @@
+import os
+import sys
+
+# tests see the SINGLE real device (the dry-run alone forces 512); multi-
+# device integration tests spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run python code in a subprocess with N host platform devices."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout

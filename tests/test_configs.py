@@ -1,0 +1,100 @@
+"""Config registry + parameter-count sanity vs the public model cards."""
+import pytest
+
+from repro.configs import (
+    ALL_ARCHS,
+    ASSIGNED_ARCHS,
+    get_config,
+    get_shape,
+    get_smoke_config,
+)
+from repro.configs.base import EngineConfig
+from repro.configs.shapes import SHAPES, applicable
+
+# (arch, expected params, rtol) — expected from the papers / model cards
+EXPECTED_PARAMS = {
+    "deepseek-v3-671b": (671e9, 0.10),
+    "qwen2.5-14b": (14.8e9, 0.10),
+    "qwen2-vl-72b": (72e9, 0.12),
+    "hubert-xlarge": (1.0e9, 0.25),
+    "glm4-9b": (9.4e9, 0.15),
+    "zamba2-2.7b": (2.7e9, 0.30),
+    "chatglm3-6b": (6.2e9, 0.15),
+    "gemma3-12b": (12e9, 0.15),
+    "rwkv6-7b": (7.6e9, 0.15),
+    "granite-moe-3b-a800m": (3.3e9, 0.30),
+    "vit-b16": (86e6, 0.15),
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(ALL_ARCHS) == 11
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    exp, rtol = EXPECTED_PARAMS[arch]
+    assert abs(n - exp) / exp < rtol, \
+        f"{arch}: {n/1e9:.2f}B params, expected {exp/1e9:.1f}B ±{rtol:%}"
+
+
+def test_active_params_moe():
+    ds = get_config("deepseek-v3-671b")
+    act = ds.active_param_count()
+    assert abs(act - 37e9) / 37e9 < 0.35, f"{act/1e9:.1f}B active"
+    gr = get_config("granite-moe-3b-a800m")
+    assert gr.active_param_count() < gr.param_count() * 0.5
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_configs_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+
+
+def test_shape_matrix():
+    """32 valid pairs; skips documented in DESIGN.md §4."""
+    runs = skips = 0
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            ok, reason = applicable(cfg, s)
+            runs += ok
+            skips += not ok
+            if not ok:
+                assert reason
+    assert runs == 32 and skips == 8
+
+
+def test_long_decode_archs():
+    for arch, expect in [("rwkv6-7b", True), ("zamba2-2.7b", True),
+                         ("gemma3-12b", True), ("qwen2.5-14b", False),
+                         ("hubert-xlarge", False)]:
+        cfg = get_config(arch)
+        ok, _ = applicable(cfg, get_shape("long_500k"))
+        assert ok == expect, arch
+
+
+def test_engine_config_invariant():
+    e = EngineConfig(train_batch_size=32, gradient_accumulation_steps=2)
+    assert e.derived_micro_batch(dp_world=4) == 4
+    e.validate(4)
+    with pytest.raises(ValueError):
+        EngineConfig(train_batch_size=30,
+                     gradient_accumulation_steps=4).validate(4)
+
+
+def test_gemma_layer_windows():
+    cfg = get_config("gemma3-12b")
+    w = cfg.layer_windows()
+    assert len(w) == 48
+    assert w.count(0) == 8                      # 1 global per 6
+    assert all(x in (0, 1024) for x in w)
+    # pattern: 5 local then 1 global
+    assert w[:6] == [1024] * 5 + [0]

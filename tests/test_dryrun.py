@@ -1,0 +1,52 @@
+"""Dry-run integration: one (arch x shape) pair must lower+compile on the
+production mesh in a subprocess (512 placeholder devices) and emit sane
+roofline numbers. The full 10x4 matrix runs via
+`python -m repro.launch.dryrun --all` (results/ JSONLs)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("glm4-9b", "decode_32k"),
+    ("zamba2-2.7b", "train_4k"),
+])
+def test_dryrun_pair(tmp_path, arch, shape):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(out)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    rl = rec["roofline"]
+    assert rl["compute_s"] >= 0 and rl["memory_s"] > 0
+    assert rl["dominant"] in ("compute_s", "memory_s", "collective_s")
+    # FLOPs accounting sanity: useful fraction must be <= ~1 (analyzer
+    # counts at least the model matmuls)
+    assert rl["useful_flops_frac"] < 1.5
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_pair(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "granite-moe-3b-a800m", "--shape", "train_4k", "--multi-pod",
+         "--out", str(out)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok" and rec["chips"] == 512

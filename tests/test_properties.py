@@ -1,0 +1,213 @@
+"""Hypothesis property-based tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grad_accum import accumulate_gradients, split_microbatches
+from repro.core.comm_model import (
+    StepModel,
+    allreduce_time,
+    strong_scaling_times,
+    weak_scaling_times,
+)
+from repro.models.moe import top_k_routing
+from repro.models.norms import rmsnorm
+from repro.models.rope import apply_rope
+from repro.optim import make_optimizer
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# DeepSpeed batch semantics: accumulation is exact averaging
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(accum=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 2 ** 16))
+def test_grad_accum_equals_full_batch(accum, seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (8, 4))
+    batch = {"x": jax.random.normal(key, (16, 8)),
+             "y": jax.random.normal(key, (16, 4))}
+
+    def loss_fn(params, b):
+        pred = b["x"] @ params
+        loss = jnp.mean((pred - b["y"]) ** 2)
+        return loss, {"loss": loss}
+
+    g1, _ = accumulate_gradients(loss_fn, w, batch, 1)
+    gk, _ = accumulate_gradients(loss_fn, w, batch, accum)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(gk),
+                               atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([4, 8, 24]), accum=st.sampled_from([1, 2, 4]))
+def test_split_microbatches_partition(b, accum):
+    if b % accum:
+        return
+    x = jnp.arange(b * 3).reshape(b, 3)
+    mbs = split_microbatches({"x": x}, accum)
+    assert mbs["x"].shape == (accum, b // accum, 3)
+    np.testing.assert_array_equal(
+        np.asarray(mbs["x"].reshape(b, 3)), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16),
+       scale_pow=st.floats(-2.0, 2.0))
+def test_rmsnorm_scale_invariance(seed, scale_pow):
+    """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4, 64)) + 0.1
+    c = 10.0 ** scale_pow
+    sc = jnp.ones((64,))
+    a = rmsnorm(x, sc, 1e-8)
+    b = rmsnorm(c * x, sc, 1e-8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16))
+def test_rmsnorm_unit_rms(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 128))
+    out = rmsnorm(x, jnp.ones((128,)), 1e-8)
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# RoPE: norm preservation + relative-position property
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), style=st.sampled_from(["full", "half"]))
+def test_rope_preserves_norm(seed, style):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 16, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    q2, _ = apply_rope(q, q, pos, style=style, theta=10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(q), axis=-1),
+        np.linalg.norm(np.asarray(q2), axis=-1), rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(shift=st.integers(0, 32))
+def test_rope_relative_property(shift):
+    """<rope(q,i), rope(k,j)> depends only on i-j: shifting both positions
+    by the same offset leaves q·k unchanged."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 8, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 1, 64))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+    q1, k1 = apply_rope(q, k, pos, style="full", theta=10000.0)
+    q2, k2 = apply_rope(q, k, pos + shift, style="full", theta=10000.0)
+    dots1 = np.einsum("bshd,bthd->bst", np.asarray(q1), np.asarray(k1))
+    dots2 = np.einsum("bshd,bthd->bst", np.asarray(q2), np.asarray(k2))
+    np.testing.assert_allclose(dots1, dots2, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE routing invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), e=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]))
+def test_router_dispatch_invariants(seed, e, k):
+    b, s = 2, 16
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (b, s, e))
+    capacity = s  # ample
+    dispatch, combine, aux = top_k_routing(logits, k, capacity)
+    d = np.asarray(dispatch)
+    c = np.asarray(combine)
+    # each token dispatched to exactly k (expert, slot) pairs
+    np.testing.assert_allclose(d.sum((-1, -2)), k, atol=1e-6)
+    # each capacity slot holds at most one token
+    assert (d.sum(1) <= 1 + 1e-6).all()
+    # combine weights live exactly where dispatch does, and sum to the
+    # selected top-k softmax mass (<= 1)
+    assert ((c > 0) <= (d > 0)).all()
+    total = c.sum((-1, -2))
+    assert (total <= 1 + 1e-5).all()
+    assert float(aux) > 0
+
+
+def test_router_aux_uniform_is_one():
+    """Perfectly uniform router -> aux loss == 1 (switch normalization)."""
+    b, s, e = 4, 64, 8
+    logits = jnp.zeros((b, s, e))
+    _, _, aux = top_k_routing(logits, 2, s)
+    np.testing.assert_allclose(float(aux), 1.0, rtol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers: descent on a quadratic
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(name=st.sampled_from(["adamw", "sgd", "lamb"]))
+def test_optimizer_descends(name):
+    opt = make_optimizer(name, weight_decay=0.0, grad_clip=0.0)
+    w = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(w)
+
+    def loss(w):
+        return jnp.sum(w["w"] ** 2)
+
+    l0 = float(loss(w))
+    for _ in range(50):
+        g = jax.grad(loss)(w)
+        w, state, _ = opt.update(g, state, w, 0.05)
+    assert float(loss(w)) < l0 * 0.5
+
+
+# ---------------------------------------------------------------------------
+# Comm model properties (the scaling simulator the figures rely on)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(nbytes=st.floats(1e3, 1e10), n=st.integers(2, 512))
+def test_allreduce_monotone_in_bytes(nbytes, n):
+    assert allreduce_time(nbytes, n, 5e10) <= allreduce_time(
+        nbytes * 2, n, 5e10) + 1e-12
+
+
+def test_strong_scaling_improves_then_saturates():
+    t = strong_scaling_times(10.0, 400e6, [1, 2, 4, 8, 16, 32])
+    assert t[1] < t[0] and t[2] < t[1]           # early speedup
+    speedup = t[0] / np.array(t)
+    assert speedup[-1] < 32                      # sub-ideal (comm overhead)
+
+
+def test_weak_scaling_flat_homogeneous():
+    t = weak_scaling_times(1.0, 400e6, [1, 2, 4, 8])
+    assert max(t) / min(t) < 1.2                 # near-constant
+
+
+def test_heterogeneous_cluster_straggles():
+    """Paper §IV-B: adding slower GPUs (Tesla machines 0,3) can INCREASE
+    strong-scaling step time."""
+    hetero = [1.0, 1.0, 1.0, 0.3, 0.27]          # rtx3070s + gtx1070 + p4
+    t = strong_scaling_times(10.0, 400e6, [3, 5], hetero=hetero)
+    assert t[1] > t[0] * 0.7                     # barely helps / hurts
+    t_homo = strong_scaling_times(10.0, 400e6, [5])
+    assert t[1] > t_homo[0]
+
+
+def test_sync_fraction_drops_with_batch():
+    """Paper Fig. 6: larger batch -> lower sync share of the step."""
+    fracs = []
+    for mb_scale in (1, 4, 16):
+        m = StepModel(grad_bytes=400e6,
+                      compute_times=[0.05 * mb_scale] * 4)
+        fracs.append(m.sync_fraction())
+    assert fracs[0] > fracs[1] > fracs[2]
