@@ -1,0 +1,59 @@
+"""Flash-attention fwd+bwd micro-benchmarks (interpret mode on CPU —
+*relative* timings; the derived column carries the gradient max-error vs
+the pure-jnp ref_attention oracle, which is the deploy gate for the
+custom-VJP training hot path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import ref_attention
+
+CASES = [
+    ("causal", True, 0),
+    ("vit_bidir", False, 0),       # the paper's ViT encoder configuration
+    ("window256", True, 256),
+]
+
+
+def _grad_fn(attn):
+    def loss(q, k, v):
+        return jnp.sum(attn(q, k, v).astype(jnp.float32))
+    return jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+
+
+def _max_err(ga, gb):
+    return max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(ga, gb))
+
+
+def bench_flash_fwd_bwd(rows):
+    key = jax.random.PRNGKey(3)
+    b, h, kh, s, d = 1, 4, 2, 512, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kh, s, d))
+    v = jax.random.normal(ks[2], (b, kh, s, d))
+
+    for name, causal, window in CASES:
+        flash = functools.partial(flash_attention, causal=causal,
+                                  window=window, block_q=128, block_k=128,
+                                  interpret=True)
+        ref = functools.partial(ref_attention, causal=causal, window=window)
+        f_fwd = jax.jit(lambda q, k, v, _f=flash: _f(q, k, v))
+        g_flash = _grad_fn(flash)
+        g_ref = _grad_fn(ref)
+        t_fwd = time_fn(f_fwd, q, k, v, iters=3, warmup=1)
+        t_bwd = time_fn(g_flash, q, k, v, iters=3, warmup=1)
+        err = _max_err(g_flash(q, k, v), g_ref(q, k, v))
+        emit(rows, f"flash_fwd_{name}_s512", t_fwd * 1e6, "pallas_interp")
+        emit(rows, f"flash_fwdbwd_{name}_s512", t_bwd * 1e6,
+             f"max_grad_err={err:.1e};oracle=ref_attention")
+
+
+ALL = [bench_flash_fwd_bwd]

@@ -9,10 +9,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_figures, roofline_report
+    from benchmarks import attn_bwd_bench, kernel_bench, paper_figures, \
+        roofline_report
 
     rows = ["name,us_per_call,derived"]
-    suites = paper_figures.ALL + kernel_bench.ALL + roofline_report.ALL
+    suites = (paper_figures.ALL + kernel_bench.ALL + attn_bwd_bench.ALL
+              + roofline_report.ALL)
     t0 = time.time()
     failures = 0
     for fn in suites:

@@ -7,6 +7,8 @@ to world size (the paper's §IV-A weak-scaling protocol).
 from __future__ import annotations
 
 import math
+import struct
+import zlib
 from typing import Iterator, Optional
 
 import jax
@@ -14,6 +16,13 @@ import numpy as np
 
 from repro.data.synthetic import DatasetSpec, make_image_batch, \
     make_token_batch
+
+
+def batch_seed(seed: int, epoch: int, i: int) -> int:
+    """Stable 31-bit batch seed. Python's hash() is salted per process
+    (PYTHONHASHSEED), so two launcher processes would derive *different*
+    "identical" batches; crc32 over the packed tuple is process-invariant."""
+    return zlib.crc32(struct.pack("<qqq", seed, epoch, i)) % (2 ** 31)
 
 
 class DataPipeline:
@@ -40,7 +49,7 @@ class DataPipeline:
 
     def batches(self, epoch: int = 0) -> Iterator[dict]:
         for i in range(self.steps_per_epoch):
-            seed = hash((self.seed, epoch, i)) % (2 ** 31)
+            seed = batch_seed(self.seed, epoch, i)
             if self.kind == "image":
                 yield make_image_batch(self.dataset, self.global_batch,
                                        seed=seed, resolution=self.resolution)

@@ -1,36 +1,133 @@
-"""Flash attention Pallas TPU kernel — online-softmax, VMEM-tiled.
+"""Flash attention Pallas TPU kernels — forward + backward, custom VJP.
 
 TPU adaptation (DESIGN.md §6): the GPU flash algorithm's warp-level softmax
 reductions become full-tile VPU reductions; tiles are MXU-aligned
 (block_q × head_dim and block_k × head_dim multiples of 128 where the
-head_dim allows). Grid = (batch, q_heads, q_blocks, k_blocks) with the
-k-block axis innermost and sequential ("arbitrary"), carrying the running
-max/denominator/accumulator in VMEM scratch. GQA is expressed in the K/V
-BlockSpec index maps (kv_head = q_head // group), so no K/V replication is
-materialized in HBM.
+head_dim allows). Forward grid = (batch, q_heads, q_blocks, k_blocks) with
+the k-block axis innermost and sequential ("arbitrary"), carrying the
+running max/denominator/accumulator in VMEM scratch. GQA is expressed in
+the K/V BlockSpec index maps (kv_head = q_head // group), so no K/V
+replication is materialized in HBM.
 
 The sliding ``window`` and causal flags arrive as scalar-prefetch operands
 (SMEM), keeping one compiled kernel for gemma3's per-layer local/global mix.
+
+Backward pass (the training hot path)
+-------------------------------------
+``flash_attention`` is a ``jax.custom_vjp``: gradients never differentiate
+through the interpreter/Mosaic forward. The forward additionally emits the
+per-row logsumexp ``lse = m + log(l)`` (fp32, shape (B,H,S)) so the backward
+recomputes probabilities directly as ``P = exp(S·scale − lse)`` without
+re-running the online softmax. Two passes share the grid machinery:
+
+* **dq pass** — grid (B, H, nq, nk), k innermost sequential. Per K-block:
+  ``dP = dO·Vᵀ``, ``dS = P ∘ (dP − Δ)``, ``dq += scale · dS·K`` into an
+  fp32 VMEM accumulator flushed at the last K-block. ``Δ = rowsum(dO ∘ O)``
+  is a cheap elementwise XLA preprocess (fp32, shape (B,H,S)).
+* **dk/dv pass** — grid (B, KH, nk, group, nq) with the (group, q_block)
+  axes innermost-sequential, so dK/dV accumulate over every query head of
+  the GQA group and every Q-block in fp32 VMEM scratch and are written once
+  per K-block — the GQA reduction stays in the BlockSpec index maps, no
+  (B,H,T,D) per-q-head gradient is ever materialized in HBM.
+
+Block-skip masking: for causal / sliding-window layers, K-blocks that are
+entirely masked for a Q-block (``k_min > q_max`` resp.
+``q_min − k_max ≥ window``) early-exit via ``pl.when`` in forward and both
+backward passes (~2× fewer tiles for causal, more for windowed layers);
+fully-live interior blocks skip the iota/compare/select mask arithmetic via
+``lax.cond``. The flags are traced scalars, so one compiled kernel serves
+all layers; ``block_skip=False`` disables pruning for ablation.
+
+Ragged tails (``s % block_q`` or ``t % block_k`` ≠ 0): out-of-bounds block
+reads are undefined (NaN in interpret mode), so the tile masks include
+bounds terms, probabilities are formed with NaN-discarding ``where``, and
+tiles that feed a matmul against an exactly-zero factor (V in forward; Q,
+dO, K, V in backward) are zeroed beyond the sequence edge — 0·NaN would
+otherwise poison the accumulators. Fully-masked rows write
+``lse = +LSE_BIG`` so the backward's ``exp(S − lse)`` underflows to 0.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0 ** 30
+LSE_BIG = 2.0 ** 30     # lse stand-in for fully-masked rows: exp(s-LSE_BIG)=0
 
 
-def _kernel(meta_ref,            # SMEM scalar prefetch: [causal, window]
-            q_ref, k_ref, v_ref,  # VMEM tiles
-            o_ref,                # VMEM out tile
-            m_scr, l_scr, acc_scr,
-            *, block_q, block_k, scale, num_k_blocks):
+class _Spec(NamedTuple):
+    """Static kernel configuration (hashable: custom_vjp nondiff arg)."""
+    block_q: int
+    block_k: int
+    interpret: bool
+    block_skip: bool
+
+
+# ---------------------------------------------------------------------------
+# block-level predicates (traced: causal/window live in SMEM)
+# ---------------------------------------------------------------------------
+
+def _block_dead(causal, window, qi, ki, block_q, block_k):
+    """True iff K-block ki is entirely masked for Q-block qi."""
+    q_min = qi * block_q
+    q_max = q_min + block_q - 1
+    k_min = ki * block_k
+    k_max = k_min + block_k - 1
+    dead_causal = (causal > 0) & (k_min > q_max)
+    dead_window = (window > 0) & ((q_min - k_max) >= window)
+    return dead_causal | dead_window
+
+
+def _block_needs_mask(causal, window, qi, ki, block_q, block_k, s, t):
+    """False iff every (q,k) pair in the tile is live and in-bounds."""
+    q_min = qi * block_q
+    q_max = q_min + block_q - 1
+    k_min = ki * block_k
+    k_max = k_min + block_k - 1
+    cut_causal = (causal > 0) & (k_max > q_min)
+    cut_window = (window > 0) & ((q_max - k_min) >= window)
+    ragged = (q_max >= s) | (k_max >= t)
+    return cut_causal | cut_window | ragged
+
+
+def _tile_mask(causal, window, qi, ki, block_q, block_k, s, t):
+    """(block_q, block_k) bool mask: causal ∧ window ∧ bounds."""
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (q_pos < s) & (k_pos < t)
+    mask &= jnp.where(causal > 0, k_pos <= q_pos, True)
+    mask &= jnp.where(window > 0, (q_pos - k_pos) < window, True)
+    return mask
+
+
+def _row_valid(idx, block, limit):
+    """(block, 1) bool: rows of this tile that are inside the sequence."""
+    rows = idx * block + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
+    return rows < limit
+
+
+# ---------------------------------------------------------------------------
+# forward kernel (online softmax, emits lse residual)
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(meta_ref,            # SMEM scalar prefetch: [causal, window]
+                q_ref, k_ref, v_ref,  # VMEM tiles
+                o_ref, lse_ref,       # VMEM out tiles
+                m_scr, l_scr, acc_scr,
+                *, block_q, block_k, scale, num_k_blocks, seq_q, seq_k,
+                block_skip):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
+    causal = meta_ref[0]
+    window = meta_ref[1]
 
     @pl.when(ki == 0)
     def _init():
@@ -38,63 +135,64 @@ def _kernel(meta_ref,            # SMEM scalar prefetch: [causal, window]
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    causal = meta_ref[0]
-    window = meta_ref[1]
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        # zero OOB V rows: P columns there are exactly 0 and 0*NaN = NaN
+        v = jnp.where(_row_valid(ki, block_k, seq_k),
+                      v_ref[0, 0].astype(jnp.float32), 0.0)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
-    k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
-    v = v_ref[0, 0].astype(jnp.float32)            # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jax.lax.cond(
+            _block_needs_mask(causal, window, qi, ki, block_q, block_k,
+                              seq_q, seq_k),
+            lambda x: jnp.where(_tile_mask(causal, window, qi, ki, block_q,
+                                           block_k, seq_q, seq_k),
+                                x, NEG_INF),
+            lambda x: x, s)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+        m_prev = m_scr[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                     # (bq, bk)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 0)
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 1)
-    mask = jnp.where(causal > 0, k_pos <= q_pos, True)
-    mask &= jnp.where(window > 0, (q_pos - k_pos) < window, True)
-    s = jnp.where(mask, s, NEG_INF)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
 
-    m_prev = m_scr[...]                            # (bq, 1)
-    m_cur = jnp.max(s, axis=-1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                         # (bq, bk)
-
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
-        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    if block_skip:
+        pl.when(jnp.logical_not(
+            _block_dead(causal, window, qi, ki, block_q, block_k)))(_compute)
+    else:
+        _compute()
 
     @pl.when(ki == num_k_blocks - 1)
     def _finish():
-        denom = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        m = m_scr[...]
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        # fully-masked rows (m never updated) get LSE_BIG so that the
+        # backward's exp(s - lse) underflows to an exact 0
+        lse = jnp.where(m > 0.5 * NEG_INF, m + jnp.log(l), LSE_BIG)
+        lse_ref[0, 0] = lse[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                             "interpret"))
-def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
-                    block_k=128, interpret=False):
-    """q (B,H,S,D), k/v (B,KH,T,D). window: int32 scalar (0=full, may be
-    traced). Returns (B,H,S,D) in q.dtype."""
+def _forward(spec, meta, q, k, v):
     b, h, s, d = q.shape
     kh, t = k.shape[1], k.shape[2]
     dv = v.shape[3]
     g = h // kh
-    block_q = min(block_q, s)
-    block_k = min(block_k, t)
-    nq = pl.cdiv(s, block_q)
-    nk = pl.cdiv(t, block_k)
+    bq = min(spec.block_q, s)
+    bk = min(spec.block_k, t)
+    nq = pl.cdiv(s, bq)
+    nk = pl.cdiv(t, bk)
 
-    meta = jnp.array([1 if causal else 0, 0], jnp.int32) \
-        .at[1].set(jnp.asarray(window, jnp.int32))
-
-    grid = (b, h, nq, nk)
     kernel = functools.partial(
-        _kernel, block_q=block_q, block_k=block_k, scale=d ** -0.5,
-        num_k_blocks=nk)
+        _fwd_kernel, block_q=bq, block_k=bk, scale=d ** -0.5,
+        num_k_blocks=nk, seq_q=s, seq_k=t, block_skip=spec.block_skip)
 
     # index maps receive (*grid_indices, *scalar_prefetch_refs)
     def q_map(bb, hh, qi, ki, meta):
@@ -103,27 +201,315 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
     def kv_map(bb, hh, qi, ki, meta):
         return (bb, hh // g, ki, 0)
 
-    out = pl.pallas_call(
+    def lse_map(bb, hh, qi, ki, meta):
+        return (bb, hh, qi)
+
+    out, lse = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=grid,
+            grid=(b, h, nq, nk),
             in_specs=[
-                pl.BlockSpec((1, 1, block_q, d), q_map),
-                pl.BlockSpec((1, 1, block_k, d), kv_map),
-                pl.BlockSpec((1, 1, block_k, dv), kv_map),
+                pl.BlockSpec((1, 1, bq, d), q_map),
+                pl.BlockSpec((1, 1, bk, d), kv_map),
+                pl.BlockSpec((1, 1, bk, dv), kv_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, block_q, dv), q_map),
+            out_specs=[
+                pl.BlockSpec((1, 1, bq, dv), q_map),
+                pl.BlockSpec((1, 1, bq), lse_map),
+            ],
             scratch_shapes=[
-                pltpu.VMEM((block_q, 1), jnp.float32),
-                pltpu.VMEM((block_q, 1), jnp.float32),
-                pltpu.VMEM((block_q, dv), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, dv), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
-        interpret=interpret,
+        interpret=spec.interpret,
     )(meta, q, k, v)
-    return out
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward kernels: recompute P from lse, fp32 accumulators
+# ---------------------------------------------------------------------------
+
+def _load_bwd_tiles(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    qi, ki, block_q, block_k, seq_q, seq_k):
+    """Shared dq/dkv tile prologue: fp32 upcast with OOB rows zeroed (OOB
+    block reads are undefined — NaN in interpret mode — and every tile here
+    feeds a matmul whose other factor is exactly 0 in that region)."""
+    kv_ok = _row_valid(ki, block_k, seq_k)
+    q_ok = _row_valid(qi, block_q, seq_q)
+    q = jnp.where(q_ok, q_ref[0, 0].astype(jnp.float32), 0.0)
+    k = jnp.where(kv_ok, k_ref[0, 0].astype(jnp.float32), 0.0)
+    v = jnp.where(kv_ok, v_ref[0, 0].astype(jnp.float32), 0.0)
+    do = jnp.where(q_ok, do_ref[0, 0].astype(jnp.float32), 0.0)
+    lse = lse_ref[0, 0][:, None]                   # (bq, 1)
+    delta = delta_ref[0, 0][:, None]
+    return q, k, v, do, lse, delta
+
+
+def _recompute_p_ds(causal, window, qi, ki, block_q, block_k, seq_q, seq_k,
+                    scale, s_, dp, lse, delta):
+    """P = exp(S − lse); dS = scale · P ∘ (dP − Δ). Fully-live blocks skip
+    the mask arithmetic (lax.cond); masked entries go through where() so
+    NaN/inf from OOB reads never propagate."""
+    def _with_mask(_):
+        mask = _tile_mask(causal, window, qi, ki, block_q, block_k,
+                          seq_q, seq_k)
+        p = jnp.where(mask, jnp.exp(s_ - lse), 0.0)
+        ds = jnp.where(mask, p * (dp - delta), 0.0) * scale
+        return p, ds
+
+    def _no_mask(_):
+        p = jnp.exp(s_ - lse)
+        return p, p * (dp - delta) * scale
+
+    return jax.lax.cond(
+        _block_needs_mask(causal, window, qi, ki, block_q, block_k,
+                          seq_q, seq_k),
+        _with_mask, _no_mask, None)
+
+
+def _dq_kernel(meta_ref,
+               q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, dq_scr,
+               *, block_q, block_k, scale, num_k_blocks, seq_q, seq_k,
+               block_skip):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    causal = meta_ref[0]
+    window = meta_ref[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    def _compute():
+        q, k, v, do, lse, delta = _load_bwd_tiles(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            qi, ki, block_q, block_k, seq_q, seq_k)
+        s_ = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        _, ds = _recompute_p_ds(causal, window, qi, ki, block_q, block_k,
+                                seq_q, seq_k, scale, s_, dp, lse, delta)
+        dq_scr[...] += jax.lax.dot(ds, k,
+                                   preferred_element_type=jnp.float32)
+
+    if block_skip:
+        pl.when(jnp.logical_not(
+            _block_dead(causal, window, qi, ki, block_q, block_k)))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(meta_ref,
+                q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr,
+                *, block_q, block_k, scale, group, num_q_blocks, seq_q,
+                seq_k, block_skip):
+    ki = pl.program_id(2)
+    gi = pl.program_id(3)
+    qi = pl.program_id(4)
+    causal = meta_ref[0]
+    window = meta_ref[1]
+
+    @pl.when((gi == 0) & (qi == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    def _compute():
+        q, k, v, do, lse, delta = _load_bwd_tiles(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            qi, ki, block_q, block_k, seq_q, seq_k)
+        s_ = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        p, ds = _recompute_p_ds(causal, window, qi, ki, block_q, block_k,
+                                seq_q, seq_k, scale, s_, dp, lse, delta)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),       # pᵀ · dO  (bk, dv)
+            preferred_element_type=jnp.float32)
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),       # dsᵀ · Q  (bk, d)
+            preferred_element_type=jnp.float32)
+
+    if block_skip:
+        pl.when(jnp.logical_not(
+            _block_dead(causal, window, qi, ki, block_q, block_k)))(_compute)
+    else:
+        _compute()
+
+    @pl.when((gi == group - 1) & (qi == num_q_blocks - 1))
+    def _finish():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _backward(spec, meta, q, k, v, do, lse, delta):
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    dv_dim = v.shape[3]
+    g = h // kh
+    bq = min(spec.block_q, s)
+    bk = min(spec.block_k, t)
+    nq = pl.cdiv(s, bq)
+    nk = pl.cdiv(t, bk)
+    scale = d ** -0.5
+
+    # ---- dq pass: grid (B, H, nq, nk), k innermost sequential ----
+    def q_map(bb, hh, qi, ki, meta):
+        return (bb, hh, qi, 0)
+
+    def kv_map(bb, hh, qi, ki, meta):
+        return (bb, hh // g, ki, 0)
+
+    def lse_map(bb, hh, qi, ki, meta):
+        return (bb, hh, qi)
+
+    dq_kernel = functools.partial(
+        _dq_kernel, block_q=bq, block_k=bk, scale=scale, num_k_blocks=nk,
+        seq_q=s, seq_k=t, block_skip=spec.block_skip)
+
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), q_map),
+                pl.BlockSpec((1, 1, bk, d), kv_map),
+                pl.BlockSpec((1, 1, bk, dv_dim), kv_map),
+                pl.BlockSpec((1, 1, bq, dv_dim), q_map),
+                pl.BlockSpec((1, 1, bq), lse_map),
+                pl.BlockSpec((1, 1, bq), lse_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, d), q_map),
+            scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=spec.interpret,
+    )(meta, q, k, v, do, lse, delta)
+
+    # ---- dk/dv pass: grid (B, KH, nk, group, nq); the (group, q_block)
+    # axes are innermost-sequential so the fp32 scratch accumulates the
+    # whole GQA group before one flush per K-block ----
+    def q_map2(bb, kk, ki, gi, qi, meta):
+        return (bb, kk * g + gi, qi, 0)
+
+    def kv_map2(bb, kk, ki, gi, qi, meta):
+        return (bb, kk, ki, 0)
+
+    def lse_map2(bb, kk, ki, gi, qi, meta):
+        return (bb, kk * g + gi, qi)
+
+    dkv_kernel = functools.partial(
+        _dkv_kernel, block_q=bq, block_k=bk, scale=scale, group=g,
+        num_q_blocks=nq, seq_q=s, seq_k=t, block_skip=spec.block_skip)
+
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, kh, nk, g, nq),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), q_map2),
+                pl.BlockSpec((1, 1, bk, d), kv_map2),
+                pl.BlockSpec((1, 1, bk, dv_dim), kv_map2),
+                pl.BlockSpec((1, 1, bq, dv_dim), q_map2),
+                pl.BlockSpec((1, 1, bq), lse_map2),
+                pl.BlockSpec((1, 1, bq), lse_map2),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, bk, d), kv_map2),
+                pl.BlockSpec((1, 1, bk, dv_dim), kv_map2),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bk, d), jnp.float32),
+                pltpu.VMEM((bk, dv_dim), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, t, d), k.dtype),
+            jax.ShapeDtypeStruct((b, kh, t, dv_dim), v.dtype),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+        interpret=spec.interpret,
+    )(meta, q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom VJP plumbing
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(spec, meta, q, k, v):
+    return _forward(spec, meta, q, k, v)[0]
+
+
+def _flash_fwd_rule(spec, meta, q, k, v):
+    out, lse = _forward(spec, meta, q, k, v)
+    return out, (meta, q, k, v, out, lse)
+
+
+def _flash_bwd_rule(spec, res, do):
+    meta, q, k, v, out, lse = res
+    delta = jnp.sum(out.astype(jnp.float32) * do.astype(jnp.float32),
+                    axis=-1)                        # (B,H,S) fp32
+    dq, dk, dv = _backward(spec, meta, q, k, v, do, lse, delta)
+    dmeta = np.zeros(np.shape(meta), dtype=jax.dtypes.float0)
+    return dmeta, dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def _meta(causal, window):
+    return jnp.array([1 if causal else 0, 0], jnp.int32) \
+        .at[1].set(jnp.asarray(window, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret", "block_skip"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False, block_skip=True):
+    """q (B,H,S,D), k/v (B,KH,T,D). window: int32 scalar (0=full, may be
+    traced). Differentiable (custom VJP, Pallas backward kernels).
+    Returns (B,H,S,D) in q.dtype."""
+    spec = _Spec(block_q, block_k, interpret, block_skip)
+    return _flash(spec, _meta(causal, window), q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret", "block_skip"))
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, block_q=128,
+                        block_k=128, interpret=False, block_skip=True):
+    """Forward returning ``(out, lse)`` — the fp32 (B,H,S) logsumexp
+    residual the backward consumes (exposed for tests/inspection)."""
+    spec = _Spec(block_q, block_k, interpret, block_skip)
+    return _forward(spec, _meta(causal, window), q, k, v)

@@ -21,13 +21,20 @@ def _auto_interpret(interpret):
 
 
 def flash_mha(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
-              interpret=None):
-    """q (B,S,H,D), k/v (B,T,KH,D) — model layout. GQA folded in-kernel."""
+              interpret=None, block_skip=True):
+    """q (B,S,H,D), k/v (B,T,KH,D) — model layout. GQA folded in-kernel.
+
+    Differentiable: gradients route through the flash kernel's custom VJP
+    (Pallas dq and dk/dv passes recomputing P from the saved fp32 lse) —
+    ``jax.grad`` never differentiates the forward interpreter. The
+    transposes here are linear, so the VJP composes transparently.
+    ``block_skip`` prunes fully-masked K-blocks (causal/window)."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     out = _flash(qt, kt, vt, causal=causal, window=window, block_q=block_q,
-                 block_k=block_k, interpret=_auto_interpret(interpret))
+                 block_k=block_k, interpret=_auto_interpret(interpret),
+                 block_skip=block_skip)
     return out.transpose(0, 2, 1, 3)
 
 

@@ -43,7 +43,7 @@ def fused_rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret=False):
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x2, scale)

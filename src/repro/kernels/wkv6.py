@@ -111,7 +111,7 @@ def wkv6_chunked_kernel(r, k, v, wlog, u, s0, *, chunk=32, interpret=False):
             jax.ShapeDtypeStruct((b, h, p, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(rc, kc, vc, wc, u, s0)

@@ -42,6 +42,9 @@ def main():
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--dataset", default="cifar10")
     ap.add_argument("--seq-parallel", default="none")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="flash-attention Pallas kernels (custom-VJP train "
+                         "path; interpret mode off-TPU)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
@@ -58,6 +61,8 @@ def main():
     from repro.launch.mesh import make_local_mesh
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    if args.use_pallas:
+        cfg = cfg.replace(use_pallas=True)
     if cfg.arch_type == "vit":
         cfg = cfg.replace(num_classes=DATASETS[args.dataset].num_classes)
     mesh = make_local_mesh(model=args.model_axis)

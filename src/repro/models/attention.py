@@ -150,9 +150,12 @@ def attention_block(p, x, cfg, *, positions, window, cache=None,
         mask = mask[None, None, None, None]                # (1,1,1,1,T)
         out = sdpa(q, k, v, mask, softcap=cfg.attn_logit_softcap)
     elif cfg.use_pallas and cfg.attn_logit_softcap == 0.0:
-        # flash kernel: causal/window masks are positional -> in-kernel
+        # flash kernel: causal/window masks are positional -> in-kernel;
+        # train gradients route through the kernel's custom VJP (Pallas
+        # backward passes), so this is the differentiable hot path
         from repro.kernels.ops import flash_mha
-        out = flash_mha(q, k, v, causal=cfg.causal, window=window)
+        out = flash_mha(q, k, v, causal=cfg.causal, window=window,
+                        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
     elif cfg.attn_impl == "blockwise" and cfg.attn_logit_softcap == 0.0:
         from repro.models.blockwise import blockwise_attention_qchunked
         out = blockwise_attention_qchunked(q, k, v, window,
@@ -235,7 +238,9 @@ def mla_block(p, x, cfg, *, positions, cache=None, cache_index=None):
         qfull = jnp.concatenate([q_nope, q_rope], -1)
         if cfg.use_pallas:
             from repro.kernels.ops import flash_mha
-            out = flash_mha(qfull, k, v, causal=True, window=0)
+            out = flash_mha(qfull, k, v, causal=True, window=0,
+                            block_q=cfg.attn_block_q,
+                            block_k=cfg.attn_block_k)
         elif cfg.attn_impl == "blockwise":
             from repro.models.blockwise import blockwise_attention_qchunked
             out = blockwise_attention_qchunked(qfull, k, v, 0, causal=True,

@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_smoke_config
 from repro.models import transformer as model

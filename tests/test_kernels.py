@@ -15,6 +15,7 @@ KEY = jax.random.PRNGKey(42)
 @pytest.mark.parametrize("b,h,kh,s,d", [
     (1, 4, 4, 128, 64), (2, 8, 2, 256, 64), (1, 4, 1, 128, 128),
     (2, 2, 2, 64, 32),
+    (1, 4, 2, 100, 32),   # ragged tail: s % block != 0 (OOB blocks masked)
 ])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
                                            (False, 0)])

@@ -3,7 +3,10 @@ and convergence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.optim.onebit import compress_ef, compressed_bytes, \
     make_onebit_optimizer
