@@ -1,12 +1,17 @@
 """Kernel micro-benchmarks: Pallas (interpret) correctness-path timing vs
 pure-jnp reference, plus the blockwise-attention XLA path that the dry-run
 memory numbers rest on. On CPU these are *relative* numbers; the derived
-column carries the oracle max-error (the deploy gate)."""
+column carries the oracle max-error (the deploy gate).
+
+Every train-path kernel gets a fwd row AND a fwd+bwd row (the backward is
+the training hot path), and the flash block-skip ablation records the
+*launched grid-cell* counts — under index-map-level pruning the skipped
+K-blocks are never DMA'd, so ``grid_cells`` IS the HBM-traffic/FLOP saving
+by construction (not just a predicate-skip count)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.kernels.ref import ref_attention, ref_rmsnorm, ref_wkv6
@@ -36,21 +41,11 @@ def bench_attention(rows):
          f"max_err={err:.1e};ratio={t_blk/t_ref:.2f}")
 
 
-def _live_kblocks(s, t, bq, bk, *, causal, window):
-    """Blocks the kernel executes under block-skip pruning — evaluates the
-    kernel's own _block_dead predicate on host ints, so this IS the
-    executed-tile/FLOP count by construction."""
-    from repro.kernels.flash_attention import _block_dead
-    nq, nk = -(-s // bq), -(-t // bk)
-    live = sum(not _block_dead(int(causal), window, qi, ki, bq, bk)
-               for qi in range(nq) for ki in range(nk))
-    return live, nq * nk
-
-
-def bench_flash_blockskip(rows):
-    """Block-skip ablation (pruning on/off): causal and windowed at s=1024.
-    FLOPs scale with executed K-blocks; time_ratio is interpret-mode."""
-    from repro.kernels.flash_attention import flash_attention
+def bench_flash_grid_pruning(rows):
+    """DMA-pruning ablation (grid pruning on/off): causal and windowed at
+    s=1024. ``grid_cells`` is the launched grid (skipped K-blocks are not
+    DMA'd under index-map pruning); causal ≈ ½ of dense."""
+    from repro.kernels.flash_attention import flash_attention, grid_cells
     key = jax.random.PRNGKey(4)
     b, h, s, d, blk = 1, 4, 1024, 64, 128
     ks = jax.random.split(key, 3)
@@ -68,19 +63,27 @@ def bench_flash_blockskip(rows):
         t_full = time_fn(fns[False], q, k, v, iters=5, warmup=1)
         err = float(jnp.max(jnp.abs(fns[True](q, k, v)
                                     - fns[False](q, k, v))))
-        live, total = _live_kblocks(s, s, blk, blk, causal=causal,
-                                    window=window)
-        # flop_ratio is the real (TPU) saving: the skip predicate is exact.
-        # interp_time_ratio is CPU-interpret-mode only, where per-block
-        # cond/DMA-emulation overhead swamps the skipped tile math.
-        emit(rows, f"flash_skip_{name}_s1024", t_skip * 1e6,
-             f"kblocks={live}/{total};flop_ratio={live/total:.3f};"
+        live, dense = grid_cells(s, s, causal=causal, window=window,
+                                 block_q=blk, block_k=blk)
+        # dma_ratio is the real (TPU) HBM-traffic AND FLOP saving: only
+        # `live` cells are launched, so only their K/V tiles are copied.
+        # interp_time_ratio is CPU-interpret-mode only.
+        emit(rows, f"flash_grid_{name}_s1024", t_skip * 1e6,
+             f"grid_cells={live}/{dense};dma_ratio={live/dense:.3f};"
              f"interp_time_ratio={t_skip/t_full:.2f};max_err={err:.1e}")
-        emit(rows, f"flash_noskip_{name}_s1024", t_full * 1e6,
+        emit(rows, f"flash_dense_{name}_s1024", t_full * 1e6,
              "ablation_baseline")
 
 
+def _grad_max_err(ga, gb):
+    return max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)))
+
+
 def bench_wkv6(rows):
+    """wkv6 fwd and fwd+bwd vs the sequential oracle — the bwd runs the
+    reverse-chunk Pallas kernel through the custom VJP."""
     from repro.kernels.ops import wkv6
     key = jax.random.PRNGKey(1)
     b, s, h, p = 1, 512, 4, 64
@@ -89,18 +92,32 @@ def bench_wkv6(rows):
     wlog = -jnp.exp(jax.random.normal(ks[3], (b, s, h, p)) - 0.5)
     u = 0.3 * jax.random.normal(ks[4], (h, p))
     s0 = jnp.zeros((b, h, p, p))
+    args = (r, k, v, wlog, u, s0)
+
     f_ref = jax.jit(lambda *a: ref_wkv6(*a)[0])
-    t_ref = time_fn(f_ref, r, k, v, wlog, u, s0)
     f_kern = jax.jit(lambda *a: wkv6(*a, chunk=32, interpret=True)[0])
-    t_kern = time_fn(f_kern, r, k, v, wlog, u, s0)
-    err = float(jnp.max(jnp.abs(f_kern(r, k, v, wlog, u, s0)
-                                - f_ref(r, k, v, wlog, u, s0))))
-    emit(rows, "wkv6_ref_seq_s512", t_ref * 1e6, "oracle(sequential)")
-    emit(rows, "wkv6_pallas_interp_s512", t_kern * 1e6,
-         f"max_err={err:.1e}")
+    t_ref = time_fn(f_ref, *args)
+    t_kern = time_fn(f_kern, *args)
+    err = float(jnp.max(jnp.abs(f_kern(*args) - f_ref(*args))))
+    emit(rows, "wkv6_fwd_ref_seq_s512", t_ref * 1e6, "oracle(sequential)")
+    emit(rows, "wkv6_fwd_pallas_s512", t_kern * 1e6, f"max_err={err:.1e}")
+
+    def gfn(fn):
+        return jax.jit(jax.grad(
+            lambda *a: jnp.sum(fn(*a)[0]), argnums=tuple(range(6))))
+    g_ref = gfn(lambda *a: ref_wkv6(*a))
+    g_kern = gfn(lambda *a: wkv6(*a, chunk=32, interpret=True))
+    t_gref = time_fn(g_ref, *args, iters=3, warmup=1)
+    t_gkern = time_fn(g_kern, *args, iters=3, warmup=1)
+    gerr = _grad_max_err(g_kern(*args), g_ref(*args))
+    emit(rows, "wkv6_fwdbwd_ref_seq_s512", t_gref * 1e6, "oracle(autodiff)")
+    emit(rows, "wkv6_fwdbwd_pallas_s512", t_gkern * 1e6,
+         f"max_grad_err={gerr:.1e};oracle=ref_wkv6")
 
 
 def bench_rmsnorm(rows):
+    """fused rmsnorm fwd and fwd+bwd — the bwd is the row-tiled dx/dscale
+    kernel reusing the saved per-row inv-rms."""
     from repro.kernels.ops import fused_rmsnorm
     x = jax.random.normal(jax.random.PRNGKey(2), (4096, 1024))
     sc = jnp.ones((1024,))
@@ -109,8 +126,21 @@ def bench_rmsnorm(rows):
     t_ref = time_fn(f_ref, x, sc)
     t_kern = time_fn(f_kern, x, sc)
     err = float(jnp.max(jnp.abs(f_kern(x, sc) - f_ref(x, sc))))
-    emit(rows, "rmsnorm_ref_4096x1024", t_ref * 1e6, "oracle")
-    emit(rows, "rmsnorm_pallas_interp", t_kern * 1e6, f"max_err={err:.1e}")
+    emit(rows, "rmsnorm_fwd_ref_4096x1024", t_ref * 1e6, "oracle")
+    emit(rows, "rmsnorm_fwd_pallas", t_kern * 1e6, f"max_err={err:.1e}")
+
+    def gfn(fn):
+        return jax.jit(jax.grad(
+            lambda a, b: jnp.sum(fn(a, b)), argnums=(0, 1)))
+    g_ref = gfn(ref_rmsnorm)
+    g_kern = gfn(lambda a, b: fused_rmsnorm(a, b, interpret=True))
+    t_gref = time_fn(g_ref, x, sc, iters=5, warmup=1)
+    t_gkern = time_fn(g_kern, x, sc, iters=5, warmup=1)
+    gerr = _grad_max_err(g_kern(x, sc), g_ref(x, sc))
+    emit(rows, "rmsnorm_fwdbwd_ref_4096x1024", t_gref * 1e6,
+         "oracle(autodiff)")
+    emit(rows, "rmsnorm_fwdbwd_pallas", t_gkern * 1e6,
+         f"max_grad_err={gerr:.1e};oracle=ref_rmsnorm")
 
 
-ALL = [bench_attention, bench_flash_blockskip, bench_wkv6, bench_rmsnorm]
+ALL = [bench_attention, bench_flash_grid_pruning, bench_wkv6, bench_rmsnorm]

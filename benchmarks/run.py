@@ -1,32 +1,78 @@
 """Benchmark harness: one function per paper table/figure + kernel micro-
 benchmarks + the dry-run roofline report. Prints ``name,us_per_call,derived``
-CSV (the repo contract)."""
+CSV (the repo contract) and writes the kernel rows to ``BENCH_kernels.json``
+(the canonical perf-trajectory artifact CI uploads — PR-over-PR kernel
+timings and oracle errors live there).
+
+``--suite kernels`` runs only the kernel + attention-backward suites (the
+CI fast path); default runs everything.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def _row_dict(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def _write_kernel_json(kernel_rows, path: str) -> None:
+    payload = {
+        "schema": "repro/kernel-bench/v1",
+        "substrate": "pallas-interpret-cpu",
+        "note": ("CPU-interpret relative timings; derived carries oracle "
+                 "max-error and grid-cell/DMA-pruning counts (the deploy "
+                 "gates)"),
+        "rows": [_row_dict(r) for r in kernel_rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--suite", choices=("all", "kernels"), default="all")
+    parser.add_argument("--json-out", default="BENCH_kernels.json",
+                        help="kernel-row JSON artifact path")
+    args = parser.parse_args(argv)
+
     from benchmarks import attn_bwd_bench, kernel_bench, paper_figures, \
         roofline_report
 
-    rows = ["name,us_per_call,derived"]
-    suites = (paper_figures.ALL + kernel_bench.ALL + attn_bwd_bench.ALL
-              + roofline_report.ALL)
+    kernel_suites = kernel_bench.ALL + attn_bwd_bench.ALL
+    if args.suite == "kernels":
+        suites = kernel_suites
+    else:
+        suites = (paper_figures.ALL + kernel_suites + roofline_report.ALL)
+    kernel_set = set(kernel_suites)
+
+    header = "name,us_per_call,derived"
+    rows = [header]
+    kernel_rows = []
     t0 = time.time()
     failures = 0
     for fn in suites:
+        start = len(rows)
         try:
             fn(rows)
         except Exception:  # noqa: BLE001 — report all suites
             traceback.print_exc()
             rows.append(f"{fn.__name__},0.00,ERROR")
             failures += 1
+        if fn in kernel_set:
+            kernel_rows.extend(rows[start:])
+    _write_kernel_json(kernel_rows, args.json_out)
     print("\n".join(rows))
     print(f"# {len(rows)-1} rows in {time.time()-t0:.1f}s, "
-          f"{failures} failures", file=sys.stderr)
+          f"{failures} failures; kernel rows -> "
+          f"{os.path.abspath(args.json_out)}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

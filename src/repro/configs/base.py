@@ -107,6 +107,7 @@ class ModelConfig:
     moe_impl: str = "gshard"        # gshard (einsum) | gather (§Perf)
     attn_block_k: int = 512
     attn_block_q: int = 512
+    norm_block_rows: int = 256      # fused-rmsnorm row-tile height
     remat: str = "none"             # none | block  (activation checkpointing)
 
     def __post_init__(self):

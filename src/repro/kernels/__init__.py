@@ -1,3 +1,41 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Differentiable Pallas TPU kernel subsystem.
+
+Custom kernels for the compute hot spots the paper's scaling results rest
+on: flash attention (ViT/GQA/MLA train paths), the WKV6 recurrence (RWKV6),
+and the fused RMSNorm that runs 2·L times per transformer step. On CPU
+containers everything executes under ``interpret=True``; on TPU the same
+kernels compile to Mosaic (``interpret=None`` auto-detects).
+
+Kernel-authoring convention (enforced by review, reused by every kernel):
+
+* **kernel module** (``flash_attention.py`` / ``wkv6.py`` / ``rmsnorm.py``)
+  — Pallas forward AND backward kernels. Forward-only kernels are
+  demo-tier; anything on a train path gets the full treatment.
+* **ref oracle** (``ref.py``) — a pure-jnp definitional implementation.
+  It is the allclose ground truth for outputs and, through ``jax.vjp``,
+  for gradients.
+* **custom VJP** (``vjp.py`` harness) — the kernel's static config rides a
+  hashable spec as nondiff arg 0; the forward returns
+  ``(primal, residuals)`` (inputs + cheap fp32 summaries: flash lse,
+  rmsnorm inv-rms, wkv6 entering chunk states); backward kernels
+  accumulate in fp32 VMEM scratch and cast to primal dtypes at the flush.
+  ``jax.grad`` therefore never differentiates an interpreter/Mosaic body.
+* **parity test** (``tests/test_flash_grad.py``,
+  ``tests/test_kernel_grads.py``) — outputs and gradients vs the ref
+  oracle, covering bf16 inputs, ragged tails, and the end-to-end
+  ``use_pallas`` on/off train step.
+* **dispatch** (``ops.py``) — the single surface the model layer imports;
+  resolves tile sizes from ``ModelConfig`` and the interpret substrate.
+"""
+from repro.kernels.flash_attention import flash_attention_fwd, grid_cells
+from repro.kernels.ops import flash_mha, fused_rmsnorm
+from repro.kernels.rmsnorm import fused_rmsnorm_fwd
+from repro.kernels.wkv6 import wkv6_chunked_kernel
+
+# NOTE: ``kernels.flash_attention`` / ``kernels.wkv6`` (the *modules*) keep
+# their names at package level, so the differentiable entry points of the
+# same name are reached as module attributes or via the ops dispatch layer.
+__all__ = [
+    "flash_attention_fwd", "flash_mha", "fused_rmsnorm",
+    "fused_rmsnorm_fwd", "grid_cells", "wkv6_chunked_kernel",
+]

@@ -1,45 +1,52 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Uniform dispatch layer over the differentiable Pallas kernels.
 
-On this CPU-only container the kernels execute in ``interpret=True`` mode
-(the kernel body runs in Python/XLA-CPU); on a real TPU backend they compile
-to Mosaic. `interpret=None` auto-detects.
+This is the ONE surface the model layer consumes kernels through
+(``models/attention.py``, ``models/rwkv6.py``, ``models/norms.py``): every
+op takes an optional ``cfg`` (a ``ModelConfig``) from which tile sizes are
+resolved via the ``kernels.vjp`` defaults (``attn_block_q/attn_block_k``,
+``norm_block_rows``, ``ssm.chunk_size``), and ``interpret=None``
+auto-detects the substrate (interpret off-TPU, Mosaic on TPU).
+
+Every op here is differentiable: gradients route through the kernels'
+custom VJPs (Pallas backward passes) — ``jax.grad`` never differentiates a
+forward interpreter body. Layout adapters in this file (transposes,
+padding) are linear/XLA-differentiable, so they compose transparently with
+the custom VJPs.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import vjp
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rmsnorm import fused_rmsnorm as _rmsnorm
 from repro.kernels.wkv6 import wkv6_chunked_kernel as _wkv6
 
 
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
-
-
-def flash_mha(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
-              interpret=None, block_skip=True):
+def flash_mha(q, k, v, *, causal=True, window=0, cfg=None, block_q=None,
+              block_k=None, interpret=None, block_skip=True):
     """q (B,S,H,D), k/v (B,T,KH,D) — model layout. GQA folded in-kernel.
 
     Differentiable: gradients route through the flash kernel's custom VJP
-    (Pallas dq and dk/dv passes recomputing P from the saved fp32 lse) —
-    ``jax.grad`` never differentiates the forward interpreter. The
-    transposes here are linear, so the VJP composes transparently.
-    ``block_skip`` prunes fully-masked K-blocks (causal/window)."""
+    (Pallas dq and dk/dv passes recomputing P from the saved fp32 lse; the
+    Δ preprocess is fused into the dq pass). ``block_skip`` prunes
+    statically-dead K-blocks at the *grid* level (index-map pruning — the
+    skipped blocks are never DMA'd) and traced-window deadness in-kernel."""
+    bq, bk = vjp.attn_blocks(cfg, block_q, block_k)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    out = _flash(qt, kt, vt, causal=causal, window=window, block_q=block_q,
-                 block_k=block_k, interpret=_auto_interpret(interpret),
+    out = _flash(qt, kt, vt, causal=causal, window=window, block_q=bq,
+                 block_k=bk, interpret=vjp.auto_interpret(interpret),
                  block_skip=block_skip)
     return out.transpose(0, 2, 1, 3)
 
 
-def wkv6(r, k, v, wlog, u, s0, *, chunk=32, interpret=None):
-    """r/k/v/wlog (B,S,H,P); pads S to a chunk multiple internally."""
+def wkv6(r, k, v, wlog, u, s0, *, cfg=None, chunk=None, interpret=None):
+    """r/k/v/wlog (B,S,H,P); pads S to a chunk multiple internally (padded
+    steps carry decay 1 / zero keys, so state and gradients pass through
+    untouched). Differentiable via the wkv6 reverse-chunk backward kernel."""
+    chunk = vjp.wkv_chunk(cfg, chunk)
     s = r.shape[1]
     pad = (-s) % chunk
     if pad:
@@ -47,10 +54,14 @@ def wkv6(r, k, v, wlog, u, s0, *, chunk=32, interpret=None):
                    for t in (r, k, v))
         wlog = jnp.pad(wlog, [(0, 0), (0, pad), (0, 0), (0, 0)])
     o, s_end = _wkv6(r, k, v, wlog, u, s0, chunk=chunk,
-                     interpret=_auto_interpret(interpret))
+                     interpret=vjp.auto_interpret(interpret))
     return o[:, :s], s_end
 
 
-def fused_rmsnorm(x, scale, *, eps=1e-6, interpret=None):
+def fused_rmsnorm(x, scale, *, eps=1e-6, cfg=None, block_rows=None,
+                  interpret=None):
+    """x (..., D) -> rmsnorm(x) * scale. Differentiable via the row-tiled
+    dx/dscale backward kernel (saved per-row inv-rms residual)."""
     return _rmsnorm(x, scale, eps=eps,
-                    interpret=_auto_interpret(interpret))
+                    block_rows=vjp.norm_block_rows(cfg, block_rows),
+                    interpret=vjp.auto_interpret(interpret))

@@ -152,10 +152,10 @@ def attention_block(p, x, cfg, *, positions, window, cache=None,
     elif cfg.use_pallas and cfg.attn_logit_softcap == 0.0:
         # flash kernel: causal/window masks are positional -> in-kernel;
         # train gradients route through the kernel's custom VJP (Pallas
-        # backward passes), so this is the differentiable hot path
+        # backward passes), so this is the differentiable hot path. Block
+        # sizes resolve from cfg inside the ops dispatch layer.
         from repro.kernels.ops import flash_mha
-        out = flash_mha(q, k, v, causal=cfg.causal, window=window,
-                        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+        out = flash_mha(q, k, v, causal=cfg.causal, window=window, cfg=cfg)
     elif cfg.attn_impl == "blockwise" and cfg.attn_logit_softcap == 0.0:
         from repro.models.blockwise import blockwise_attention_qchunked
         out = blockwise_attention_qchunked(q, k, v, window,
@@ -188,12 +188,14 @@ def mla_block(p, x, cfg, *, positions, cache=None, cache_index=None):
     h = cfg.num_heads
     nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
 
-    cq = rmsnorm(x @ p["w_dq"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    cq = rmsnorm(x @ p["w_dq"].astype(x.dtype), p["q_norm"], cfg.norm_eps,
+                 use_pallas=cfg.use_pallas, block_rows=cfg.norm_block_rows)
     q = (cq @ p["w_uq"].astype(x.dtype)).reshape(b, s, h, nope + rope_d)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
 
     dkv = x @ p["w_dkv"].astype(x.dtype)
-    c_kv = rmsnorm(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    c_kv = rmsnorm(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps,
+                   use_pallas=cfg.use_pallas, block_rows=cfg.norm_block_rows)
     k_rope = dkv[..., m.kv_lora_rank:][:, :, None]         # (B,S,1,rope)
 
     q_rope, _ = apply_rope(q_rope, q_rope, positions, style="full",
@@ -238,9 +240,7 @@ def mla_block(p, x, cfg, *, positions, cache=None, cache_index=None):
         qfull = jnp.concatenate([q_nope, q_rope], -1)
         if cfg.use_pallas:
             from repro.kernels.ops import flash_mha
-            out = flash_mha(qfull, k, v, causal=True, window=0,
-                            block_q=cfg.attn_block_q,
-                            block_k=cfg.attn_block_k)
+            out = flash_mha(qfull, k, v, causal=True, window=0, cfg=cfg)
         elif cfg.attn_impl == "blockwise":
             from repro.models.blockwise import blockwise_attention_qchunked
             out = blockwise_attention_qchunked(qfull, k, v, 0, causal=True,

@@ -181,7 +181,8 @@ def mamba2_block(p, x, cfg, *, cache=None):
     y = y + p["D"].astype(jnp.float32)[:, None] * xc.astype(jnp.float32)
     y = y.reshape(b, s, d_in).astype(x.dtype)
     y = y * jax.nn.silu(z)
-    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps, use_pallas=cfg.use_pallas,
+                block_rows=cfg.norm_block_rows)
     out = y @ p["w_out"].astype(x.dtype)
 
     new_cache = None

@@ -1,11 +1,21 @@
-"""RMSNorm / LayerNorm / per-head GroupNorm (pure-jnp; the Pallas variant in
-repro.kernels.rmsnorm is swapped in when cfg.use_pallas)."""
+"""RMSNorm / LayerNorm / per-head GroupNorm.
+
+``rmsnorm`` is the dispatch point for the fused Pallas kernel: callers pass
+``use_pallas=cfg.use_pallas`` (and optionally ``block_rows`` /
+``interpret``) and the differentiable ``kernels.ops.fused_rmsnorm`` — with
+its row-tiled Pallas backward — takes over the 2·L-per-step hot path;
+otherwise the pure-jnp form below runs (fp32 math either way)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def rmsnorm(x, scale, eps):
+def rmsnorm(x, scale, eps, *, use_pallas=False, block_rows=None,
+            interpret=None):
+    if use_pallas:
+        from repro.kernels.ops import fused_rmsnorm
+        return fused_rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                             interpret=interpret)
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     out = xf / jnp.sqrt(var + eps)

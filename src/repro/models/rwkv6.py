@@ -186,9 +186,11 @@ def rwkv6_time_mix(p, x, cfg, *, cache=None):
                               v1.astype(jnp.float32)))
         o = o[:, None]
     elif cfg.use_pallas:
+        # differentiable kernel path: the wkv6 custom VJP routes grads
+        # through the reverse-chunk Pallas backward; chunk resolves from
+        # cfg.ssm inside the ops dispatch layer (VMEM pairwise tile bound)
         from repro.kernels.ops import wkv6 as wkv6_op
-        chunk = min(cfg.ssm.chunk_size, 32)     # VMEM pairwise tile bound
-        o, s_end = wkv6_op(r, k, v, wlog, p["bonus_u"], s0, chunk=chunk)
+        o, s_end = wkv6_op(r, k, v, wlog, p["bonus_u"], s0, cfg=cfg)
     else:
         chunk = min(cfg.ssm.chunk_size, s)
         o, s_end = wkv6_chunked(r, k, v, wlog, p["bonus_u"], chunk, s0)

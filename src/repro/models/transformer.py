@@ -48,7 +48,10 @@ def _init_norm(cfg):
 def _apply_norm(cfg, p, x):
     if _norm_kind(cfg) == "ln":
         return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
-    return rmsnorm(x, p["scale"], cfg.norm_eps)
+    # use_pallas routes through the fused kernel (differentiable: row-tiled
+    # Pallas backward); block_rows resolves from cfg
+    return rmsnorm(x, p["scale"], cfg.norm_eps, use_pallas=cfg.use_pallas,
+                   block_rows=cfg.norm_block_rows)
 
 
 # ---------------------------------------------------------------------------
