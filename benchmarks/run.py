@@ -5,7 +5,11 @@ CSV (the repo contract) and writes the kernel rows to ``BENCH_kernels.json``
 timings and oracle errors live there).
 
 ``--suite kernels`` runs only the kernel + attention-backward suites (the
-CI fast path); default runs everything.
+CI fast path); ``--suite scaling`` runs the dp x pp layout sweep on 8 host
+devices (subprocess per layout) and writes ``BENCH_scaling.json`` — the
+second trajectory artifact: per-layout step time, 1F1B bubble fraction,
+and collective bytes. Default runs the paper + kernel + roofline suites
+(scaling stays opt-in: it re-execs with a different device count).
 """
 from __future__ import annotations
 
@@ -22,14 +26,13 @@ def _row_dict(row: str) -> dict:
     return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
-def _write_kernel_json(kernel_rows, path: str) -> None:
+def _write_rows_json(rows_subset, path: str, schema: str, substrate: str,
+                     note: str) -> None:
     payload = {
-        "schema": "repro/kernel-bench/v1",
-        "substrate": "pallas-interpret-cpu",
-        "note": ("CPU-interpret relative timings; derived carries oracle "
-                 "max-error and grid-cell/DMA-pruning counts (the deploy "
-                 "gates)"),
-        "rows": [_row_dict(r) for r in kernel_rows],
+        "schema": schema,
+        "substrate": substrate,
+        "note": note,
+        "rows": [_row_dict(r) for r in rows_subset],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -38,24 +41,32 @@ def _write_kernel_json(kernel_rows, path: str) -> None:
 
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("--suite", choices=("all", "kernels"), default="all")
+    parser.add_argument("--suite", choices=("all", "kernels", "scaling"),
+                        default="all")
     parser.add_argument("--json-out", default="BENCH_kernels.json",
                         help="kernel-row JSON artifact path")
+    parser.add_argument("--scaling-json-out", default="BENCH_scaling.json",
+                        help="scaling-row JSON artifact path")
     args = parser.parse_args(argv)
 
     from benchmarks import attn_bwd_bench, kernel_bench, paper_figures, \
-        roofline_report
+        roofline_report, scaling_bench
 
     kernel_suites = kernel_bench.ALL + attn_bwd_bench.ALL
+    scaling_suites = scaling_bench.ALL
     if args.suite == "kernels":
         suites = kernel_suites
+    elif args.suite == "scaling":
+        suites = scaling_suites
     else:
         suites = (paper_figures.ALL + kernel_suites + roofline_report.ALL)
     kernel_set = set(kernel_suites)
+    scaling_set = set(scaling_suites)
 
     header = "name,us_per_call,derived"
     rows = [header]
     kernel_rows = []
+    scaling_rows = []
     t0 = time.time()
     failures = 0
     for fn in suites:
@@ -68,11 +79,29 @@ def main(argv=None) -> None:
             failures += 1
         if fn in kernel_set:
             kernel_rows.extend(rows[start:])
-    _write_kernel_json(kernel_rows, args.json_out)
+        if fn in scaling_set:
+            scaling_rows.extend(rows[start:])
+    artifacts = []
+    if args.suite != "scaling":
+        _write_rows_json(
+            kernel_rows, args.json_out, "repro/kernel-bench/v1",
+            "pallas-interpret-cpu",
+            "CPU-interpret relative timings; derived carries oracle "
+            "max-error and grid-cell/DMA-pruning counts (the deploy gates)")
+        artifacts.append(os.path.abspath(args.json_out))
+    if scaling_rows:
+        _write_rows_json(
+            scaling_rows, args.scaling_json_out, "repro/scaling-bench/v1",
+            "cpu-host-devices",
+            "dp x pp layout sweep (8 host devices, vit-b16 smoke): step "
+            "time is substrate-relative; bubble_frac (analytic 1F1B) and "
+            "collective bytes (trip-count-aware HLO) are the layout-"
+            "comparison signal")
+        artifacts.append(os.path.abspath(args.scaling_json_out))
     print("\n".join(rows))
     print(f"# {len(rows)-1} rows in {time.time()-t0:.1f}s, "
-          f"{failures} failures; kernel rows -> "
-          f"{os.path.abspath(args.json_out)}", file=sys.stderr)
+          f"{failures} failures; artifacts: {', '.join(artifacts)}",
+          file=sys.stderr)
     if failures:
         sys.exit(1)
 

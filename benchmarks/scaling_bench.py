@@ -1,0 +1,106 @@
+"""Scaling suite: the paper's strong-scaling experiment as a tracked
+artifact — dp x pp layout sweep of the ViT-B/16 smoke workload on host
+platform devices, emitting per-layout step time, 1F1B bubble fraction, and
+per-collective bytes from the trip-count-aware HLO analyzer.
+
+Each layout runs in a subprocess (host device count is fixed at jax init,
+so an in-process sweep cannot change it); the child measures a jitted
+train step and analyzes its optimized HLO, then prints one JSON line this
+parent turns into ``name,us_per_call,derived`` rows for
+``BENCH_scaling.json`` (the second trajectory artifact next to
+``BENCH_kernels.json``).
+
+CPU-host step times are *relative* numbers — the derived column's
+collective-bytes and bubble-fraction terms are the layout-comparison
+signal (they are substrate-independent).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+# dp x pp over 8 host devices; (8, 1) is the dp-only baseline
+LAYOUTS = ((8, 1), (4, 2), (2, 4))
+DEVICES = 8
+ACCUM = 4
+BATCH = 32
+STEPS = 2
+
+_CHILD = r"""
+import json, sys, time
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core.engine import DistributedEngine
+from repro.core.pipeline import bubble_fraction
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_local_mesh
+from repro.launch.specs import concrete_batch
+
+dp, pp, batch, accum, steps = (int(a) for a in sys.argv[1:6])
+cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
+mesh = make_local_mesh(model=1, pipe=pp)
+ecfg = EngineConfig(train_batch_size=batch, gradient_accumulation_steps=accum,
+                    total_steps=10, warmup_steps=1, pipeline_stages=pp)
+eng = DistributedEngine(cfg, ecfg, mesh)
+params, opt = eng.init(seed=0)
+step = eng.jit_train_step(donate=False)
+b = concrete_batch(cfg, batch, 32, seed=0)
+with mesh:
+    step(params, opt, b, jnp.int32(0))[2]["loss"].block_until_ready()  # warmup
+    t0 = time.time()
+    for i in range(steps):
+        out = step(params, opt, b, jnp.int32(i))
+    jax.block_until_ready(out)
+    dt = (time.time() - t0) / steps
+    # reuse the already-warm jitted step: hits the compile cache instead of
+    # eng.lower_train's fresh wrapper (which would recompile from scratch)
+    hlo = step.lower(params, opt, b, jnp.int32(0)).compile().as_text()
+totals = hlo_analysis.analyze(hlo)
+print("SCALING_JSON " + json.dumps({
+    "dp": dp, "pp": pp, "step_us": dt * 1e6,
+    "bubble_frac": bubble_fraction(accum, pp),
+    "coll": {k: v for k, v in totals.coll.items() if v},
+    "coll_bytes": totals.coll_bytes,
+    "loss": float(out[2]["loss"]),
+}))
+"""
+
+
+def _run_layout(dp: int, pp: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={DEVICES}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(dp), str(pp), str(BATCH),
+         str(ACCUM), str(STEPS)],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"scaling child dp={dp} pp={pp} failed:\n{r.stderr[-2000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("SCALING_JSON "):
+            return json.loads(line[len("SCALING_JSON "):])
+    raise RuntimeError(f"no SCALING_JSON line in child output:\n{r.stdout}")
+
+
+def bench_scaling_layouts(rows):
+    """One row per dp x pp layout: measured step time; derived carries the
+    analytic 1F1B bubble fraction and the HLO collective-byte breakdown."""
+    results = [_run_layout(dp, pp) for dp, pp in LAYOUTS]
+    base = results[0]["step_us"]
+    for res in results:
+        coll = ";".join(f"{k.replace('-', '_')}={v:.3e}"
+                        for k, v in sorted(res["coll"].items()))
+        rows.append(
+            f"scaling_dp{res['dp']}_pp{res['pp']},{res['step_us']:.2f},"
+            f"bubble_frac={res['bubble_frac']:.3f};"
+            f"coll_bytes={res['coll_bytes']:.3e};"
+            f"rel_step={res['step_us'] / base:.2f};{coll}")
+
+
+ALL = [bench_scaling_layouts]

@@ -1,45 +1,81 @@
 """The paper's experiment, end to end: strong + weak scaling sweep of
-DeepSpeed-style DP training across device counts, on REAL devices (host
-platform devices via subprocess), plus the analytic cluster projection.
+DeepSpeed-style DP training across device counts — and dp x pp pipeline
+layouts — on REAL devices (host platform devices via subprocess), plus the
+analytic cluster projection.
 
     PYTHONPATH=src python examples/scaling_sweep.py --counts 1 2 4
+    PYTHONPATH=src python examples/scaling_sweep.py --layouts 4x1 2x2
+
+Each run consumes the trainer's ``--metrics-out`` JSON (step-level loss /
+wall-clock history) instead of scraping stdout, and is seeded so repeated
+sweeps are reproducible and layouts are loss-comparable.
 """
 import argparse
 import json
 import os
-import re
 import subprocess
 import sys
-import time
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def run_train(devices: int, batch: int, steps: int = 8) -> float:
-    env = {**os.environ, "PYTHONPATH": "src"}
-    t0 = time.time()
-    out = subprocess.run(
-        [sys.executable, "-m", "repro.launch.train", "--arch", "vit-b16",
-         "--smoke", "--steps", str(steps), "--batch", str(batch),
-         "--devices", str(devices), "--log-every", str(steps)],
-        env=env, capture_output=True, text=True)
-    assert out.returncode == 0, out.stderr[-2000:]
-    m = re.search(r"done in ([0-9.]+)s", out.stdout)
-    return float(m.group(1)) if m else time.time() - t0
+def run_train(devices: int, batch: int, steps: int = 8, *, pp: int = 1,
+              accum: int = 1, seed: int = 0) -> dict:
+    """One trainer subprocess -> {"wall_s", "final_loss", "history"}."""
+    env = {**os.environ, "PYTHONPATH": os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src")}
+    with tempfile.NamedTemporaryFile(mode="r", suffix=".json",
+                                     prefix="repro_sweep_") as f:
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", "--arch", "vit-b16",
+             "--smoke", "--steps", str(steps), "--batch", str(batch),
+             "--devices", str(devices), "--log-every", str(steps),
+             "--pp", str(pp), "--accum", str(accum), "--seed", str(seed),
+             "--metrics-out", f.name],
+            env=env, capture_output=True, text=True)
+        assert out.returncode == 0, out.stderr[-2000:]
+        hist = json.load(f)
+    assert hist, "trainer wrote no metrics history"
+    return {"wall_s": hist[-1]["wall_s"], "final_loss": hist[-1]["loss"],
+            "history": hist}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--counts", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--layouts", nargs="*", default=[],
+                    help="dpxpp pipeline layouts (e.g. 4x1 2x2); device "
+                         "count is dp*pp, accum is max(2, pp)")
     ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default="/tmp/repro_scaling.json")
     args = ap.parse_args()
 
-    print("== measured strong scaling (real host devices, fixed global "
-          f"batch {args.batch}) ==")
     results = {}
+    print("== measured strong scaling (real host devices, fixed global "
+          f"batch {args.batch}, seed {args.seed}) ==")
     for n in args.counts:
-        dt = run_train(n, args.batch)
-        results[n] = dt
-        base = results[args.counts[0]]
-        print(f"  {n} devices: {dt:6.1f}s  speedup {base/dt:.2f}x")
+        r = run_train(n, args.batch, seed=args.seed)
+        results[f"dp{n}"] = r["wall_s"]
+        base = results[f"dp{args.counts[0]}"]
+        print(f"  {n} devices: {r['wall_s']:6.1f}s  speedup "
+              f"{base / r['wall_s']:.2f}x  final_loss {r['final_loss']:.4f}")
+
+    if args.layouts:
+        print("\n== dp x pp pipeline layouts (1F1B, fixed global batch) ==")
+        ref_loss = None
+        for layout in args.layouts:
+            dp, pp = (int(x) for x in layout.split("x"))
+            accum = max(2, pp)
+            r = run_train(dp * pp, args.batch, pp=pp, accum=accum,
+                          seed=args.seed)
+            results[f"dp{dp}_pp{pp}"] = r["wall_s"]
+            ref_loss = r["final_loss"] if ref_loss is None else ref_loss
+            drift = abs(r["final_loss"] - ref_loss)
+            print(f"  dp{dp} x pp{pp}: {r['wall_s']:6.1f}s  "
+                  f"final_loss {r['final_loss']:.4f} "
+                  f"(|Δ| vs first layout {drift:.1e})")
 
     print("\n== analytic projection to the paper's T4 cluster ==")
     from repro.core.comm_model import strong_scaling_times, weak_scaling_times
@@ -49,8 +85,9 @@ def main():
         print(f"  {n:3d} GPUs: {ti:.3f}s/step  speedup {t[0]/ti:.2f}x")
     w = weak_scaling_times(2.0, 344e6, [1, 2, 4, 8], comm_bw=3.125e9)
     print(f"  weak scaling flatness: {max(w)/min(w):.2f}x")
-    json.dump({str(k): v for k, v in results.items()},
-              open("/tmp/repro_scaling.json", "w"))
+    with open(args.json_out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"  results -> {args.json_out}")
 
 
 if __name__ == "__main__":

@@ -186,6 +186,10 @@ class EngineConfig:
     tensor_parallel: bool = True
     sequence_parallel: str = "none"     # none | ulysses
     expert_parallel: bool = True
+    # pipeline parallelism over the `pipe` mesh axis (core/pipeline.py):
+    # 1F1B microbatch schedule; microbatches come from
+    # gradient_accumulation_steps, so accum >= pipeline_stages is required
+    pipeline_stages: int = 1
     cast_params_bf16: bool = False      # §Perf: bf16 gather, f32 master
     embed_sharding: str = "vocab"       # vocab | dmodel (§Perf)
 
@@ -208,6 +212,25 @@ class EngineConfig:
                 "DeepSpeed batch invariant violated: "
                 f"{mb} * {self.gradient_accumulation_steps} * {dp_world} "
                 f"= {got} != train_batch_size={self.train_batch_size}")
+        if self.pipeline_stages > 1:
+            # 1F1B fill/drain needs at least one microbatch per stage
+            if self.gradient_accumulation_steps < self.pipeline_stages:
+                raise ValueError(
+                    "1F1B needs microbatch count >= pipeline depth: "
+                    f"gradient_accumulation_steps="
+                    f"{self.gradient_accumulation_steps} < pipeline_stages="
+                    f"{self.pipeline_stages}")
+            if self.sequence_parallel != "none":
+                raise ValueError(
+                    "pipeline_stages > 1 does not compose with Ulysses "
+                    "sequence parallelism yet")
+            if self.cast_params_bf16:
+                # AD through the tick scan accumulates stacked-param
+                # cotangents in the compute dtype; bf16 would break the
+                # fp32-accumulation policy accumulate_gradients guarantees
+                raise ValueError(
+                    "pipeline_stages > 1 does not implement the "
+                    "cast_params_bf16 fp32-grad-accumulation policy")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

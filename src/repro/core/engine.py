@@ -17,9 +17,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import EngineConfig, ModelConfig
+from repro.core import pipeline as pipe
 from repro.core import sharding as shd
 from repro.core import ulysses
-from repro.core.grad_accum import accumulate_gradients
+from repro.core.grad_accum import _constrain_tree, accumulate_gradients
 from repro.models import shardctx
 from repro.models import transformer as model
 from repro.optim import make_optimizer, make_schedule
@@ -36,6 +37,15 @@ class DistributedEngine:
                 self.dp_world *= mesh.devices.shape[
                     mesh.axis_names.index(a)]
         ecfg.validate(self.dp_world)
+        if ecfg.pipeline_stages > 1:
+            pipe.check_supported(cfg)
+            pipe.stage_partition(cfg.num_layers, ecfg.pipeline_stages)
+            ext = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if ext.get(pipe.PIPE_AXIS, 1) != ecfg.pipeline_stages:
+                raise ValueError(
+                    f"pipeline_stages={ecfg.pipeline_stages} needs a "
+                    f"'{pipe.PIPE_AXIS}' mesh axis of that extent; mesh has "
+                    f"{dict(ext)}")
         self.optimizer = make_optimizer(
             ecfg.optimizer, weight_decay=ecfg.weight_decay,
             grad_clip=ecfg.grad_clip)
@@ -54,7 +64,9 @@ class DistributedEngine:
             shapes, zero_stage=self.ecfg.zero_stage,
             tensor_parallel=self.ecfg.tensor_parallel, mesh=self.mesh,
             dp_axes=shd.dp_axes_of(self.mesh), for_opt_state=for_opt_state,
-            embed_sharding=self.ecfg.embed_sharding)
+            embed_sharding=self.ecfg.embed_sharding,
+            pipeline_axis=pipe.PIPE_AXIS
+            if self.ecfg.pipeline_stages > 1 else None)
 
     def param_shardings(self, param_shapes):
         return shd.named(self.mesh, self._pspecs(param_shapes))
@@ -96,28 +108,36 @@ class DistributedEngine:
     # ------------------------------------------------------------------
 
     def _train_step(self, params, opt_state, batch, step):
-        with shardctx.use(self.hints):
-            if self.ecfg.cast_params_bf16:
-                # ZeRO-3 §Perf optimization: convert the f32 master shards
-                # to bf16 BEFORE GSPMD's per-layer all-gather — halves
-                # all-gather bytes; master copy/optimizer stay f32.
-                compute_params = jax.tree.map(
-                    lambda p: p.astype(jnp.bfloat16)
-                    if p.dtype == jnp.float32 and p.ndim >= 2 else p,
-                    params)
-            else:
-                compute_params = params
-
-            def mb_loss(p, mb):
-                return model.loss_fn(self.cfg, p, mb)
-            # ZeRO>=2: dp-sharded grad accumulator => per-microstep
-            # reduce-scatter instead of a replicated all-reduce
-            gspecs = self._pspecs(self.init_abstract()[0],
-                                  for_opt_state=True) \
-                if self.ecfg.zero_stage >= 2 else None
-            grads, metrics = accumulate_gradients(
-                mb_loss, compute_params, batch,
-                self.ecfg.gradient_accumulation_steps, grad_specs=gspecs)
+        if self.ecfg.cast_params_bf16:
+            # ZeRO-3 §Perf optimization: convert the f32 master shards
+            # to bf16 BEFORE GSPMD's per-layer all-gather — halves
+            # all-gather bytes; master copy/optimizer stay f32.
+            compute_params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+                params)
+        else:
+            compute_params = params
+        # ZeRO>=2: dp-sharded grad accumulator => per-microstep
+        # reduce-scatter instead of a replicated all-reduce
+        gspecs = self._pspecs(self.init_abstract()[0],
+                              for_opt_state=True) \
+            if self.ecfg.zero_stage >= 2 else None
+        if self.ecfg.pipeline_stages > 1:
+            # 1F1B pipeline route (core/pipeline.py). Runs outside the
+            # Ulysses hint context: stage-vectorized activations carry a
+            # leading stage axis the (B,S,D) hints don't describe; GSPMD
+            # infers layouts from the pipe/dp constraints instead. ZeRO
+            # still composes: grads get the same dp-sharded constraint.
+            grads, metrics = self._pipeline_grads(compute_params, batch,
+                                                  gspecs)
+        else:
+            with shardctx.use(self.hints):
+                def mb_loss(p, mb):
+                    return model.loss_fn(self.cfg, p, mb)
+                grads, metrics = accumulate_gradients(
+                    mb_loss, compute_params, batch,
+                    self.ecfg.gradient_accumulation_steps, grad_specs=gspecs)
         lr = self.schedule(step)
         new_params, new_opt, gnorm = self.optimizer.update(
             grads, opt_state, params, lr)
@@ -125,6 +145,26 @@ class DistributedEngine:
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr
         return new_params, new_opt, metrics
+
+    def _pipeline_grads(self, compute_params, batch, gspecs):
+        """Mean grads + metrics via the 1F1B pipelined loss — numerically
+        interchangeable with ``accumulate_gradients`` over the same
+        microbatches (the pp-vs-dp parity invariant)."""
+        pspecs = self._pspecs(self.init_abstract()[0])
+
+        def pipe_loss(p, b):
+            return pipe.pipelined_loss(
+                self.cfg, p, b,
+                stages=self.ecfg.pipeline_stages,
+                num_micro=self.ecfg.gradient_accumulation_steps,
+                dp_axes=shd.dp_axes_of(self.mesh),
+                pipe_axis=pipe.PIPE_AXIS,
+                stack_specs=pipe.stage_stack_specs(pspecs["stack"]))
+
+        (_, metrics), grads = jax.value_and_grad(
+            pipe_loss, has_aux=True)(compute_params, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return _constrain_tree(grads, gspecs), metrics
 
     def jit_train_step(self, param_shapes=None, batch_shapes=None,
                        donate=True):

@@ -1,0 +1,282 @@
+"""Pipeline parallelism (DeepSpeed PipelineEngine equivalent) on a `pipe`
+mesh axis.
+
+Two coupled pieces:
+
+1. **Schedule** (`one_f_one_b`, `bubble_count`): an explicit 1F1B
+   (one-forward-one-back) microbatch schedule, simulated per stage with unit
+   forward/backward slots — warmup forwards, steady-state F/B alternation,
+   cooldown backwards. This is the scheduling/accounting source of truth:
+   per-stage bubble count is ``stages - 1`` slot pairs and the bubble
+   fraction is ``(S-1)/(M+S-1)``, which `benchmarks/scaling_bench.py`
+   records next to measured step times.
+
+2. **Execution** (`pipelined_loss`): the transformer block stack is
+   partitioned into contiguous per-stage layer ranges (embed pinned to the
+   first stage, head/loss to the last), and the microbatch loop runs as a
+   ``jax.lax.scan`` over ``M + S - 1`` pipeline ticks. The stage dimension is
+   *vectorized* (leading S axis on activations and stage-local params) and
+   sharded over the ``pipe`` mesh axis, so GSPMD partitions each tick's
+   stage computation across pipe devices and lowers the end-of-tick shift
+   ``concat([inject, h[:-1]])`` to the inter-stage ``collective-permute``
+   (verified in the lowered HLO by tests/test_pipeline.py). Reverse-mode AD
+   through the scan transposes the shift and replays the ticks backwards —
+   the backward pipeline with the same per-stage bubble structure.
+
+   Why not ``shard_map`` + ``jax.lax.ppermute``: manual collectives on a
+   manual-subgroup axis combined with ``auto`` (GSPMD) axes hit an
+   unimplemented path in the jaxlib 0.4.37 SPMD partitioner ("PartitionId
+   instruction is not supported" / IsManualSubgroup check failure). The
+   vectorized-stage formulation produces the identical collective-permute
+   schedule while keeping ZeRO / tensor-parallel sharding on the remaining
+   axes fully composable (the issue's requirement); grads of stage-local
+   params stay pipe-sharded and reduce-scatter over dp exactly as in the
+   non-pipelined path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.grad_accum import split_microbatches
+from repro.models import transformer as model
+
+PIPE_AXIS = "pipe"
+
+
+# ---------------------------------------------------------------------------
+# stage partitioning
+# ---------------------------------------------------------------------------
+
+def stage_partition(num_layers: int, stages: int) -> List[tuple]:
+    """Contiguous [lo, hi) layer ranges per stage; embed is pinned to stage
+    0 and the head to stage ``stages - 1`` by construction."""
+    if stages < 1:
+        raise ValueError(f"stages must be >= 1, got {stages}")
+    if num_layers % stages:
+        raise ValueError(
+            f"num_layers={num_layers} not divisible by pipeline "
+            f"stages={stages}")
+    lps = num_layers // stages
+    return [(s * lps, (s + 1) * lps) for s in range(stages)]
+
+
+def check_supported(cfg) -> None:
+    """Pipeline path covers the scan-stacked attn/mla block stack (the
+    paper's ViT + dense LMs). Branching stacks need per-stage routing."""
+    if cfg.block_kind not in ("attn", "mla"):
+        raise ValueError(
+            f"pipeline_stages > 1 unsupported for block_kind="
+            f"{cfg.block_kind!r} (only attn/mla stacks)")
+    if cfg.moe and cfg.moe.num_experts > 0:
+        raise ValueError("pipeline_stages > 1 unsupported for MoE stacks "
+                         "(dense/moe split breaks contiguous staging)")
+    if cfg.mtp_depth > 0:
+        raise ValueError("pipeline_stages > 1 unsupported with MTP heads")
+    if cfg.hybrid_group > 0:
+        raise ValueError("pipeline_stages > 1 unsupported for hybrid stacks")
+    if cfg.rope_style == "mrope" or cfg.arch_type == "vlm":
+        # M-RoPE positions are batch-supplied per microbatch; the pipelined
+        # loop computes positions once from microbatch 0 (valid only for
+        # shape-derived arange/None positions), so vlm would silently train
+        # with microbatch-0's position grid
+        raise ValueError("pipeline_stages > 1 unsupported for vlm/M-RoPE "
+                         "(batch-dependent rope positions)")
+
+
+# ---------------------------------------------------------------------------
+# 1F1B schedule
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PipeTask:
+    kind: str       # "F" | "B"
+    micro: int      # microbatch index
+
+
+def one_f_one_b(num_micro: int, num_stages: int) -> List[List[Optional[PipeTask]]]:
+    """Simulate the 1F1B schedule with unit F/B slots.
+
+    Returns ``sched[stage][tick] -> PipeTask | None`` (None = bubble).
+    Dependency rules: stage s may forward microbatch m one tick after stage
+    s-1 forwarded it; may backward m one tick after stage s+1 backwarded it
+    (last stage: after its own forward). Policy: each stage caps in-flight
+    microbatches at ``num_stages - stage`` — warmup forwards, then strict
+    F/B alternation, then cooldown backwards (DeepSpeed/PipeDream-flush).
+    """
+    if num_micro < num_stages:
+        raise ValueError(
+            f"1F1B needs microbatches >= stages: {num_micro} < {num_stages}")
+    S, M = num_stages, num_micro
+    fwd_done = [[None] * M for _ in range(S)]   # tick stage s forwarded m
+    bwd_done = [[None] * M for _ in range(S)]
+    nf = [0] * S                                # forwards issued per stage
+    nb = [0] * S                                # backwards issued per stage
+    sched: List[List[Optional[PipeTask]]] = [[] for _ in range(S)]
+    t = 0
+    while min(nb) < M:
+        if t > 4 * (M + S):                     # simulator safety net
+            raise RuntimeError("1F1B schedule did not converge")
+        for s in range(S):
+            can_fwd = nf[s] < M and (
+                s == 0 or fwd_done[s - 1][nf[s]] is not None
+                and fwd_done[s - 1][nf[s]] < t)
+            can_bwd = nb[s] < nf[s] and (
+                s == S - 1 or bwd_done[s + 1][nb[s]] is not None
+                and bwd_done[s + 1][nb[s]] < t)
+            in_flight = nf[s] - nb[s]
+            # the 1F1B memory cap: at most S - s activations live on stage
+            # s; past the cap the stage waits for a backward, never piles
+            # up more forwards (what distinguishes 1F1B from GPipe)
+            if can_bwd and (in_flight >= S - s or nf[s] == M):
+                bwd_done[s][nb[s]] = t
+                sched[s].append(PipeTask("B", nb[s]))
+                nb[s] += 1
+            elif can_fwd and in_flight < S - s:
+                fwd_done[s][nf[s]] = t
+                sched[s].append(PipeTask("F", nf[s]))
+                nf[s] += 1
+            elif can_bwd:
+                bwd_done[s][nb[s]] = t
+                sched[s].append(PipeTask("B", nb[s]))
+                nb[s] += 1
+            else:
+                sched[s].append(None)
+        t += 1
+    return sched
+
+
+def bubble_count(sched: List[List[Optional[PipeTask]]], stage: int) -> int:
+    """Idle slots of ``stage`` in F+B pair units — ``stages - 1`` for 1F1B
+    (the warmup/cooldown ramp each stage pays once)."""
+    idle = sum(1 for task in sched[stage] if task is None)
+    assert idle % 2 == 0, (stage, idle)
+    return idle // 2
+
+
+def bubble_fraction(num_micro: int, num_stages: int) -> float:
+    """Analytic pipeline-bubble fraction (S-1)/(M+S-1) of the 1F1B round."""
+    return (num_stages - 1) / (num_micro + num_stages - 1)
+
+
+# ---------------------------------------------------------------------------
+# pipelined execution
+# ---------------------------------------------------------------------------
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except RuntimeError as e:
+        # tolerate ONLY the no-mesh case (single-device semantics tests);
+        # anything else (spec/rank mismatch under a live mesh) must surface
+        # — silently unconstrained stage params replicate across pipe
+        if "mesh" not in str(e).lower():
+            raise
+        return x
+
+
+def stage_stack_specs(stack_specs, stages_axis=PIPE_AXIS):
+    """(L, ...) stacked-param specs -> (S, L/S, ...) stage-local specs.
+
+    The engine's param specs put ``pipe`` on the leading L axis; after the
+    per-stage reshape the leading axis is the stage axis (still pipe) and
+    the layers-within-stage axis is unsharded. Inner (fsdp/tp) dims are
+    preserved so ZeRO-3 stays stage-locally sharded.
+    """
+    def one(spec):
+        parts = tuple(spec)
+        lead = parts[0] if parts else None
+        if lead not in (stages_axis, None):
+            lead = stages_axis
+        return P(stages_axis if lead is not None else None, None,
+                 *parts[1:])
+    return jax.tree.map(one, stack_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def pipelined_loss(cfg, params, batch, *, stages: int, num_micro: int,
+                   dp_axes=("data",), pipe_axis: Optional[str] = PIPE_AXIS,
+                   stack_specs=None):
+    """1F1B-scheduled pipeline-parallel loss: (loss, metrics).
+
+    Matches ``accumulate_gradients(model.loss_fn, ...)`` numerically —
+    microbatches come from the same ``split_microbatches``, the loss is the
+    mean of per-microbatch losses, and metrics are microbatch means — so
+    pp>1 reproduces the dp-only loss trajectory (tests/test_pipeline.py).
+
+    ``pipe_axis=None`` drops sharding constraints (semantics-only mode used
+    by single-device tests); ``stack_specs`` optionally carries the engine's
+    stage-local specs so ZeRO inner-dim sharding survives the reshape.
+    """
+    check_supported(cfg)
+    stage_partition(cfg.num_layers, stages)     # validates divisibility
+    S, M = stages, num_micro
+    if M < S:
+        raise ValueError(f"1F1B needs microbatches >= stages: {M} < {S}")
+
+    mbs = split_microbatches(batch, M)          # (M, B/M, ...) leaves
+    lps = cfg.num_layers // S
+    stack = jax.tree.map(
+        lambda x: x.reshape((S, lps) + x.shape[1:]), params["stack"])
+    if pipe_axis is not None:
+        if stack_specs is None:
+            stack_specs = jax.tree.map(
+                lambda x: P(pipe_axis, *(None,) * (x.ndim - 1)), stack)
+        stack = jax.tree.map(_constrain, stack, stack_specs)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32).reshape(S, lps)
+
+    mb0 = jax.tree.map(lambda x: x[0], mbs)
+    inject0, positions = model.embed(cfg, params, mb0)
+    dp = tuple(dp_axes)
+    state_spec = None
+    if pipe_axis is not None:
+        state_spec = P(pipe_axis, dp if dp else None,
+                       *(None,) * (inject0.ndim - 1))
+
+    def stage_fn(stage_stack, stage_windows, h):
+        return model.stack_forward(cfg, stage_stack, h, positions,
+                                   stage_windows)
+
+    def tick(carry, t):
+        h_out, loss_sum, metric_sum = carry
+        # stage 0 ingests microbatch t (clamped: ticks >= M drain the pipe
+        # with a dead re-injection whose output never reaches the head)
+        mb = jax.tree.map(lambda x: x[jnp.minimum(t, M - 1)], mbs)
+        inject, _ = model.embed(cfg, params, mb)
+        # inter-stage transfer: shift the stage axis by one — GSPMD lowers
+        # this to collective-permute over `pipe`
+        x_in = _constrain(jnp.concatenate([inject[None], h_out[:-1]], 0),
+                          state_spec)
+        h_new = _constrain(jax.vmap(stage_fn)(stack, windows, x_in),
+                           state_spec)
+        # last stage: microbatch t-(S-1) exits the pipe this tick
+        m_idx = t - (S - 1)
+        mb_out = jax.tree.map(lambda x: x[jnp.maximum(m_idx, 0)], mbs)
+        logits = model.apply_head(cfg, params, h_new[-1])
+        loss, metrics = model.loss_from_logits(cfg, logits, mb_out)
+        valid = t >= S - 1
+        loss_sum = loss_sum + jnp.where(valid, loss, 0.0)
+        metric_sum = jax.tree.map(
+            lambda a, m: a + jnp.where(valid, m, jnp.zeros_like(m)),
+            metric_sum, metrics)
+        return (h_new, loss_sum, metric_sum), None
+
+    h0 = _constrain(jnp.zeros((S,) + inject0.shape, inject0.dtype),
+                    state_spec)
+    metric0 = jax.eval_shape(
+        lambda: model.loss_from_logits(
+            cfg, model.apply_head(cfg, params, inject0), mb0))[1]
+    metric0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), metric0)
+    (_, loss_sum, metric_sum), _ = jax.lax.scan(
+        tick, (h0, jnp.float32(0.0), metric0),
+        jnp.arange(M + S - 1, dtype=jnp.int32))
+    loss = loss_sum / M
+    metrics = jax.tree.map(lambda m: m / M, metric_sum)
+    metrics["loss"] = loss
+    return loss, metrics

@@ -110,11 +110,19 @@ def _sanitize(spec: P, shape, mesh_shape) -> P:
 
 def param_specs(params, *, zero_stage: int, tensor_parallel: bool,
                 mesh, dp_axes=("data",), tp_axis: Optional[str] = "model",
-                for_opt_state: bool = False, embed_sharding: str = "vocab"):
+                for_opt_state: bool = False, embed_sharding: str = "vocab",
+                pipeline_axis: Optional[str] = None):
     """PartitionSpec pytree matching ``params``.
 
     for_opt_state: ZeRO-1/2 shard the *optimizer state* even when params are
     replicated (stage < 3).
+
+    pipeline_axis: stage-local placement for pipeline parallelism — stacked
+    leaves (leading L layer axis) shard that axis over the pipe axis, so each
+    stage holds only its contiguous layer range (and ZeRO opt-state/grad
+    specs become stage-local too). Non-stacked leaves (embed/head/norms) stay
+    unmentioned on pipe, i.e. replicated across stages; only the first/last
+    stage contributes their gradients.
     """
     shard_params = zero_stage >= 3 or for_opt_state and zero_stage >= 1
     fsdp = tuple(dp_axes) if shard_params else None
@@ -123,6 +131,7 @@ def param_specs(params, *, zero_stage: int, tensor_parallel: bool,
     tp = tp_axis if tensor_parallel else None
     rules = _rules(fsdp, tp, embed_sharding)
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    lead = pipeline_axis if pipeline_axis in mesh.axis_names else None
 
     def spec_one(path, leaf):
         ks = _keystr(path)
@@ -136,12 +145,12 @@ def param_specs(params, *, zero_stage: int, tensor_parallel: bool,
             # norms, scalars, small vectors: shard over fsdp if it divides
             base = P(fsdp) if leaf.ndim >= 1 and not stacked else P()
             if stacked:
-                base = P(None, fsdp) if leaf.ndim >= 2 else P(None)
+                base = P(lead, fsdp) if leaf.ndim >= 2 else P(lead)
             ndim_expected = leaf.ndim
             base = P(*(tuple(base) + (None,) * (ndim_expected - len(base))))
             return _sanitize(base, leaf.shape, mesh_shape)
         if stacked:
-            base = P(*((None,) + tuple(base)))
+            base = P(*((lead,) + tuple(base)))
         # pad to leaf ndim
         base = P(*(tuple(base) + (None,) * (leaf.ndim - len(base))))
         return _sanitize(base, leaf.shape, mesh_shape)

@@ -10,10 +10,18 @@ import jax
 from repro.configs.base import MeshConfig
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips/pod (TPU v5e pod); 2 pods over DCN when multi_pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, pipe: int = 1):
+    """16x16 = 256 chips/pod (TPU v5e pod); 2 pods over DCN when multi_pod.
+
+    ``pipe > 1`` carves the pipeline axis out of the data axis (pipeline
+    stages talk over the torus ring; dp gradient reductions shrink by the
+    same factor) — axis convention ("pod",) + ("data", "pipe", "model").
+    """
+    assert 16 % pipe == 0, pipe
+    shape = (16 // pipe, pipe, 16) if pipe > 1 else (16, 16)
+    axes = ("data", "pipe", "model") if pipe > 1 else ("data", "model")
+    if multi_pod:
+        shape, axes = (2,) + shape, ("pod",) + axes
     return jax.make_mesh(shape, axes)
 
 
@@ -21,9 +29,15 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
     return MeshConfig(data=16, model=16, pod=2 if multi_pod else 1)
 
 
-def make_local_mesh(model: int = 1):
+def make_local_mesh(model: int = 1, pipe: int = 1):
     """Test/bench mesh over whatever devices exist (1 on this container
-    unless a subprocess sets xla_force_host_platform_device_count)."""
+    unless a subprocess sets xla_force_host_platform_device_count).
+
+    ``pipe > 1`` inserts the pipeline axis between data and model:
+    ("data", "pipe", "model") — dp extent is whatever remains."""
     n = len(jax.devices())
-    assert n % model == 0, (n, model)
+    assert n % (model * pipe) == 0, (n, model, pipe)
+    if pipe > 1:
+        return jax.make_mesh((n // (model * pipe), pipe, model),
+                             ("data", "pipe", "model"))
     return jax.make_mesh((n // model, model), ("data", "model"))

@@ -8,6 +8,16 @@ Single-host usage (this container):
 --devices N re-execs with xla_force_host_platform_device_count=N so the dp
 axis is real (the paper's "N GPUs"), which is how the scaling benchmarks
 and multi-device integration tests run on CPU.
+
+--pp N enables 1F1B pipeline parallelism (core/pipeline.py): the layer
+stack splits into N contiguous stages over a `pipe` mesh axis carved out of
+the device grid (devices = dp x pp x model-axis), with gradient-accumulation
+microbatches fed through the pipe — so --accum must be >= N (the 1F1B
+fill/drain invariant). --pp composes with --zero (stage-local shards) but
+not with --seq-parallel.
+
+--seed seeds both parameter init and the EngineConfig so distributed
+layouts are loss-trajectory comparable run-to-run.
 """
 from __future__ import annotations
 
@@ -40,6 +50,10 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages (1F1B over the `pipe` mesh axis; "
+                         "requires --accum >= --pp)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dataset", default="cifar10")
     ap.add_argument("--seq-parallel", default="none")
     ap.add_argument("--use-pallas", action="store_true",
@@ -65,17 +79,18 @@ def main():
         cfg = cfg.replace(use_pallas=True)
     if cfg.arch_type == "vit":
         cfg = cfg.replace(num_classes=DATASETS[args.dataset].num_classes)
-    mesh = make_local_mesh(model=args.model_axis)
+    mesh = make_local_mesh(model=args.model_axis, pipe=args.pp)
     dp = mesh.devices.shape[0]
     ecfg = EngineConfig(
         train_batch_size=args.batch,
         gradient_accumulation_steps=args.accum,
         zero_stage=args.zero, optimizer=args.optimizer, lr=args.lr,
         total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
-        sequence_parallel=args.seq_parallel)
+        sequence_parallel=args.seq_parallel, pipeline_stages=args.pp,
+        seed=args.seed)
     eng = DistributedEngine(cfg, ecfg, mesh)
     print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
-          f"devices={mesh.devices.size} dp={dp} "
+          f"devices={mesh.devices.size} dp={dp} pp={args.pp} "
           f"micro_batch={ecfg.derived_micro_batch(dp)} accum={args.accum} "
           f"zero={args.zero} opt={args.optimizer}")
 
@@ -88,7 +103,7 @@ def main():
                             vocab=max(cfg.vocab_size, 2), seq_len=args.seq,
                             epoch_size=args.batch * args.steps)
 
-    params, opt_state = eng.init(seed=0)
+    params, opt_state = eng.init(seed=args.seed)
     step_fn = eng.jit_train_step()
     hist = []
     t0 = time.time()

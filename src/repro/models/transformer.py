@@ -543,9 +543,15 @@ def _xent(logits, labels, mask=None):
     return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
 
-def loss_fn(cfg, params, batch, *, rng=None):
-    """Scalar training loss + metrics dict, per architecture family."""
-    logits, _, aux = forward(cfg, params, batch, mode="train")
+def loss_from_logits(cfg, logits, batch, aux=None):
+    """Loss + metrics given final-head ``logits`` for ``batch``.
+
+    Shared by ``loss_fn`` (single forward) and ``core/pipeline.py`` (which
+    produces per-microbatch logits on the last pipeline stage) so both paths
+    compute byte-identical objectives.
+    """
+    if aux is None:
+        aux = {"moe_aux": jnp.float32(0.0)}
     metrics = {}
     if cfg.arch_type == "vit":
         loss = _xent(logits, batch["labels"])
@@ -569,3 +575,32 @@ def loss_fn(cfg, params, batch, *, rng=None):
     metrics["moe_aux"] = aux["moe_aux"]
     metrics["loss"] = loss
     return loss, metrics
+
+
+def loss_fn(cfg, params, batch, *, rng=None):
+    """Scalar training loss + metrics dict, per architecture family."""
+    logits, _, aux = forward(cfg, params, batch, mode="train")
+    return loss_from_logits(cfg, logits, batch, aux)
+
+
+# ---------------------------------------------------------------------------
+# pipeline-parallel building blocks (core/pipeline.py)
+# ---------------------------------------------------------------------------
+
+def embed(cfg, params, batch, mode="train"):
+    """Public embedding entry: (h, rope positions) — pipeline stage 0."""
+    return _embed(cfg, params, batch, mode)
+
+
+def apply_head(cfg, params, h):
+    """Final norm + classification/LM head — pipeline last stage."""
+    return _head(cfg, params, h)
+
+
+def stack_forward(cfg, stack, h, positions, windows):
+    """Run a contiguous slice of stacked attn/mla layers (train mode, no
+    cache) — the per-stage compute unit for pipeline parallelism. ``stack``
+    leaves carry a leading (layers-in-slice,) axis; ``windows`` matches."""
+    h, _, _ = _run_attn_stack(cfg, stack, h, positions, windows, None,
+                              jnp.int32(0), use_moe=False)
+    return h

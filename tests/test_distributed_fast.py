@@ -1,0 +1,72 @@
+"""Fast-lane distributed-invariant tests: tiny-shape (2-layer smoke
+configs, 4 host devices) variants of the @slow integration invariants in
+test_engine_distributed.py, cheap enough for CI's every-push fast job —
+DP world-size invariance, ZeRO 0/1/3 equivalence, and pp=2 vs dp-only
+loss-trajectory parity. The parallelism-correctness contract is enforced
+on every push, not just nightly."""
+from conftest import run_subprocess
+
+_COMMON = r"""
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core.engine import DistributedEngine
+from repro.launch.specs import concrete_batch
+
+def run_steps(arch, mesh_shape, zero=0, steps=2, accum=2, pipe=1):
+    if pipe > 1:
+        mesh = jax.make_mesh(mesh_shape + (pipe,), ("data", "model", "pipe"))
+    else:
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    ecfg = EngineConfig(train_batch_size=8, gradient_accumulation_steps=accum,
+                        zero_stage=zero, lr=1e-3, total_steps=10,
+                        warmup_steps=1, pipeline_stages=pipe)
+    eng = DistributedEngine(cfg, ecfg, mesh)
+    params, opt = eng.init(seed=0)
+    step = eng.jit_train_step(donate=False)
+    losses = []
+    with mesh:
+        for i in range(steps):
+            batch = concrete_batch(cfg, 8, 16, seed=i)
+            params, opt, m = step(params, opt, batch, jnp.int32(i))
+            losses.append(float(m["loss"]))
+    return losses
+"""
+
+
+def test_dp_world_size_invariance_fast():
+    """Same global batch -> same loss trajectory on 1 vs 4 dp devices."""
+    out = run_subprocess(_COMMON + r"""
+l1 = run_steps("vit-b16", (1, 1))
+l4 = run_steps("vit-b16", (4, 1))
+for a, b in zip(l1, l4):
+    assert abs(a - b) < 2e-4, (l1, l4)
+print("OK", l1)
+""", devices=4, timeout=900)
+    assert "OK" in out
+
+
+def test_zero_stage_equivalence_fast():
+    """ZeRO 0/1/3 change sharding, not math (dp2 x tp2)."""
+    out = run_subprocess(_COMMON + r"""
+base = run_steps("qwen2.5-14b", (2, 2))
+for z in (1, 3):
+    lz = run_steps("qwen2.5-14b", (2, 2), zero=z)
+    for a, b in zip(base, lz):
+        assert abs(a - b) < 3e-4, (z, base, lz)
+print("OK", base)
+""", devices=4, timeout=900)
+    assert "OK" in out
+
+
+def test_pp2_vs_dp_parity_fast():
+    """pp=2 (dp2 x pipe2) reproduces the dp-only trajectory — the 1F1B
+    pipeline is a schedule change, not a math change."""
+    out = run_subprocess(_COMMON + r"""
+base = run_steps("vit-b16", (4, 1))
+lp = run_steps("vit-b16", (2, 1), pipe=2)
+for a, b in zip(base, lp):
+    assert abs(a - b) < 3e-4, (base, lp)
+print("OK", base)
+""", devices=4, timeout=900)
+    assert "OK" in out

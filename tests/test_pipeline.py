@@ -1,0 +1,253 @@
+"""Pipeline parallelism (core/pipeline.py): 1F1B schedule invariants,
+stage partitioning, single-device semantic parity, and the acceptance
+invariant — pp=2/pp=4 on an 8-device dp x pp mesh reproduce the dp-only
+loss trajectory for ViT-B/16 and an LM smoke config."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+from repro.configs import EngineConfig, get_smoke_config
+from repro.core import pipeline
+
+
+# ---------------------------------------------------------------------------
+# schedule-level (no devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("micro,stages", [(2, 2), (4, 2), (4, 4), (8, 4),
+                                          (6, 3), (8, 8)])
+def test_1f1b_bubble_count_is_stages_minus_one(micro, stages):
+    sched = pipeline.one_f_one_b(micro, stages)
+    for s in range(stages):
+        assert pipeline.bubble_count(sched, s) == stages - 1, (s, sched[s])
+
+
+@pytest.mark.parametrize("micro,stages", [(4, 2), (8, 4), (6, 3)])
+def test_1f1b_makespan_and_order(micro, stages):
+    sched = pipeline.one_f_one_b(micro, stages)
+    assert len({len(row) for row in sched}) == 1
+    assert len(sched[0]) == 2 * (micro + stages - 1)
+    for s in range(stages):
+        fwds = [t.micro for t in sched[s] if t and t.kind == "F"]
+        bwds = [t.micro for t in sched[s] if t and t.kind == "B"]
+        assert fwds == list(range(micro))
+        assert bwds == list(range(micro))
+
+
+@pytest.mark.parametrize("micro,stages", [(4, 2), (8, 4), (8, 8)])
+def test_1f1b_in_flight_bound(micro, stages):
+    """The defining 1F1B property vs GPipe: stage s never holds more than
+    stages - s in-flight microbatch activations."""
+    sched = pipeline.one_f_one_b(micro, stages)
+    for s in range(stages):
+        in_flight = 0
+        for task in sched[s]:
+            if task is None:
+                continue
+            in_flight += 1 if task.kind == "F" else -1
+            assert in_flight <= stages - s, (s, task)
+
+
+def test_1f1b_dependency_consistency():
+    """Stage s forwards m strictly after stage s-1; backwards strictly after
+    stage s+1 (flush semantics — no cross-microbatch reordering hazards)."""
+    micro, stages = 6, 3
+    sched = pipeline.one_f_one_b(micro, stages)
+    tick_of = {}
+    for s in range(stages):
+        for t, task in enumerate(sched[s]):
+            if task:
+                tick_of[(s, task.kind, task.micro)] = t
+    for m in range(micro):
+        for s in range(1, stages):
+            assert tick_of[(s, "F", m)] > tick_of[(s - 1, "F", m)]
+        for s in range(stages - 1):
+            assert tick_of[(s, "B", m)] > tick_of[(s + 1, "B", m)]
+        assert tick_of[(stages - 1, "B", m)] > tick_of[(stages - 1, "F", m)]
+
+
+def test_1f1b_rejects_underfilled_pipe():
+    with pytest.raises(ValueError, match="microbatches >= stages"):
+        pipeline.one_f_one_b(2, 4)
+
+
+def test_bubble_fraction():
+    assert pipeline.bubble_fraction(4, 1) == 0.0
+    assert pipeline.bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert pipeline.bubble_fraction(16, 4) == pytest.approx(3 / 19)
+
+
+# ---------------------------------------------------------------------------
+# partitioning / config validation
+# ---------------------------------------------------------------------------
+
+def test_stage_partition_contiguous():
+    assert pipeline.stage_partition(12, 4) == [(0, 3), (3, 6), (6, 9),
+                                               (9, 12)]
+    assert pipeline.stage_partition(2, 1) == [(0, 2)]
+    with pytest.raises(ValueError, match="not divisible"):
+        pipeline.stage_partition(12, 5)
+
+
+def test_engine_config_microbatch_ge_stages():
+    ecfg = EngineConfig(train_batch_size=16, gradient_accumulation_steps=2,
+                        pipeline_stages=4)
+    with pytest.raises(ValueError, match="microbatch count >= pipeline"):
+        ecfg.validate(2)
+    ecfg = EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
+                        pipeline_stages=4)
+    ecfg.validate(2)   # 16 = 2 x 4 x 2: fine
+
+
+def test_engine_config_pp_rejects_ulysses():
+    ecfg = EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
+                        pipeline_stages=2, sequence_parallel="ulysses")
+    with pytest.raises(ValueError, match="sequence parallelism"):
+        ecfg.validate(2)
+
+
+def test_unsupported_archs_rejected():
+    with pytest.raises(ValueError, match="MoE"):
+        pipeline.check_supported(get_smoke_config("granite-moe-3b-a800m"))
+    with pytest.raises(ValueError, match="block_kind"):
+        pipeline.check_supported(get_smoke_config("rwkv6-7b"))
+    with pytest.raises(ValueError, match="M-RoPE"):
+        # batch-supplied positions would silently reuse microbatch 0's grid
+        pipeline.check_supported(get_smoke_config("qwen2-vl-72b"))
+    pipeline.check_supported(get_smoke_config("vit-b16"))
+    pipeline.check_supported(get_smoke_config("qwen2.5-14b"))
+
+
+def test_engine_config_pp_rejects_bf16_cast():
+    ecfg = EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
+                        pipeline_stages=2, cast_params_bf16=True)
+    with pytest.raises(ValueError, match="fp32-grad-accumulation"):
+        ecfg.validate(2)
+
+
+# ---------------------------------------------------------------------------
+# single-device semantics: pipelined loss == reference loss_fn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["vit-b16", "qwen2.5-14b"])
+def test_pipelined_loss_matches_reference(arch, rng):
+    from repro.launch.specs import concrete_batch
+    from repro.models import transformer as model
+
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = model.init_params(cfg, rng)
+    batch = concrete_batch(cfg, 8, 32, seed=0)
+    ref_loss, ref_metrics = model.loss_fn(cfg, params, batch)
+
+    loss, metrics = jax.jit(
+        lambda p, b: pipeline.pipelined_loss(
+            cfg, p, b, stages=2, num_micro=4, pipe_axis=None))(params, batch)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(ref_loss),
+                               atol=2e-5)
+    assert set(metrics) == set(ref_metrics)
+
+    gref = jax.grad(lambda p: model.loss_fn(cfg, p, batch)[0])(params)
+    gpipe = jax.jit(jax.grad(
+        lambda p: pipeline.pipelined_loss(
+            cfg, p, batch, stages=2, num_micro=4, pipe_axis=None)[0]))(params)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(gref)[0],
+            jax.tree_util.tree_flatten_with_path(gpipe)[0]):
+        err = np.max(np.abs(np.asarray(a) - np.asarray(b)))
+        assert err < 1e-4, (jax.tree_util.keystr(path), err)
+
+
+def test_pipelined_loss_rejects_underfilled_pipe(rng):
+    from repro.launch.specs import concrete_batch
+    from repro.models import transformer as model
+
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+    params = model.init_params(cfg, rng)
+    batch = concrete_batch(cfg, 8, 32, seed=0)
+    with pytest.raises(ValueError, match="microbatches >= stages"):
+        pipeline.pipelined_loss(cfg, params, batch, stages=2, num_micro=1,
+                                pipe_axis=None)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 8-device dp x pp meshes reproduce the dp-only trajectory
+# ---------------------------------------------------------------------------
+
+_PP_COMMON = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core.engine import DistributedEngine
+from repro.launch.mesh import make_local_mesh
+from repro.launch.specs import concrete_batch
+
+def run_steps(arch, pp, zero=0, steps=3, accum=4, layers=4):
+    mesh = make_local_mesh(model=1, pipe=pp)
+    cfg = get_smoke_config(arch).replace(dtype="float32",
+                                         num_layers=layers)
+    ecfg = EngineConfig(train_batch_size=32, gradient_accumulation_steps=accum,
+                        zero_stage=zero, lr=1e-3, total_steps=10,
+                        warmup_steps=1, pipeline_stages=pp)
+    eng = DistributedEngine(cfg, ecfg, mesh)
+    params, opt = eng.init(seed=0)
+    step = eng.jit_train_step(donate=False)
+    losses = []
+    with mesh:
+        for i in range(steps):
+            batch = concrete_batch(cfg, 32, 32, seed=i)
+            params, opt, m = step(params, opt, batch, jnp.int32(i))
+            losses.append(float(m["loss"]))
+    return losses
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["vit-b16", "qwen2.5-14b"])
+def test_pp_vs_dp_loss_trajectory_8dev(arch):
+    """pp=2 and pp=4 on 8 host devices (dp x pp) match dp-only within 3e-4
+    over 3 steps — pipeline parallelism is a schedule, not a math change."""
+    out = run_subprocess(_PP_COMMON + r"""
+base = run_steps("%s", 1)
+for pp in (2, 4):
+    lp = run_steps("%s", pp)
+    for a, b in zip(base, lp):
+        assert abs(a - b) < 3e-4, (pp, base, lp)
+print("OK", base)
+""" % (arch, arch), devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_pp_composes_with_zero3_8dev():
+    """ZeRO-3 stage-local shards under pp=2 keep the trajectory."""
+    out = run_subprocess(_PP_COMMON + r"""
+base = run_steps("vit-b16", 1)
+lp = run_steps("vit-b16", 2, zero=3)
+for a, b in zip(base, lp):
+    assert abs(a - b) < 3e-4, (base, lp)
+print("OK", base)
+""", devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_pp_train_step_emits_collective_permute():
+    """The inter-stage transfer must lower to collective-permute over the
+    pipe axis (the ppermute the 1F1B schedule prescribes)."""
+    out = run_subprocess(_PP_COMMON + r"""
+mesh = make_local_mesh(model=1, pipe=2)
+cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+ecfg = EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
+                    pipeline_stages=2, total_steps=10, warmup_steps=1)
+eng = DistributedEngine(cfg, ecfg, mesh)
+batch_shapes = {
+    "images": jax.ShapeDtypeStruct((16, cfg.image_size, cfg.image_size, 3),
+                                   jnp.float32),
+    "labels": jax.ShapeDtypeStruct((16,), jnp.int32)}
+hlo = eng.lower_train(batch_shapes).compile().as_text()
+assert "collective-permute" in hlo, "no inter-stage collective-permute!"
+print("OK collective-permute present")
+""", devices=8)
+    assert "OK" in out
