@@ -8,6 +8,7 @@ the cluster interconnect), heterogeneity via per-device speed vectors.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -22,6 +23,20 @@ from repro.launch.mesh import make_local_mesh
 ETHERNET_10G = 1.25e9          # Tesla lab cluster
 NVLINK_NODE = 5e10             # intra-node Vector
 IB_25G = 3.125e9               # inter-node Vector
+
+
+def child_env(devices: int) -> dict:
+    """Subprocess env for an N-host-device CPU child (host device count is
+    fixed at jax init, so multi-device sweeps fork children) — one place
+    for the XLA_FLAGS/JAX_PLATFORMS/PYTHONPATH recipe shared by the
+    scaling/prefetch benches and the ckpt-size table."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    return env
 
 
 _CACHE = {}
@@ -40,15 +55,15 @@ def vit_step_time_and_bytes(batch: int = 16, steps: int = 5):
     pipe = DataPipeline(kind="image", global_batch=batch,
                         dataset=DATASETS["cifar10"],
                         resolution=cfg.image_size)
-    params, opt = eng.init(seed=0)
+    state = eng.init_state(seed=0)
     step = eng.jit_train_step(donate=False)
     it = iter(pipe.batches())
     b0 = jax.tree.map(jnp.asarray, next(it))
     with mesh:
-        step(params, opt, b0, jnp.int32(0))[2]["loss"].block_until_ready()
+        step(state, b0)[1]["loss"].block_until_ready()
         t0 = time.perf_counter()
         for i in range(steps):
-            _, _, m = step(params, opt, b0, jnp.int32(i))
+            state, m = step(state, b0)
         m["loss"].block_until_ready()
     dt = (time.perf_counter() - t0) / steps
     grad_bytes = 4 * cfg.param_count()

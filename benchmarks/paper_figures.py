@@ -86,7 +86,7 @@ def fig7_accuracy_vs_batch(rows):
         pipe = DataPipeline(kind="image", global_batch=bs,
                             dataset=DATASETS["cifar10"],
                             resolution=cfg.image_size)
-        params, opt = eng.init(seed=0)
+        state = eng.init_state(seed=0)
         step = eng.jit_train_step(donate=False)
         acc = 0.0
         with mesh:
@@ -94,7 +94,7 @@ def fig7_accuracy_vs_batch(rows):
                 if i >= 25:
                     break
                 b = jax.tree.map(jnp.asarray, b)
-                params, opt, m = step(params, opt, b, jnp.int32(i))
+                state, m = step(state, b)
                 acc = float(m["acc"])
         accs[bs] = acc
         emit(rows, f"fig7_acc_b{bs}", 0.0, f"train_acc={acc:.3f}")

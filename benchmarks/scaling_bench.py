@@ -17,7 +17,6 @@ signal (they are substrate-independent).
 from __future__ import annotations
 
 import json
-import os
 import subprocess
 import sys
 
@@ -44,41 +43,37 @@ mesh = make_local_mesh(model=1, pipe=pp)
 ecfg = EngineConfig(train_batch_size=batch, gradient_accumulation_steps=accum,
                     total_steps=10, warmup_steps=1, pipeline_stages=pp)
 eng = DistributedEngine(cfg, ecfg, mesh)
-params, opt = eng.init(seed=0)
+state = eng.init_state(seed=0)
 step = eng.jit_train_step(donate=False)
 b = concrete_batch(cfg, batch, 32, seed=0)
 with mesh:
-    step(params, opt, b, jnp.int32(0))[2]["loss"].block_until_ready()  # warmup
+    step(state, b)[1]["loss"].block_until_ready()  # warmup
     t0 = time.time()
     for i in range(steps):
-        out = step(params, opt, b, jnp.int32(i))
+        out = step(state, b)
     jax.block_until_ready(out)
     dt = (time.time() - t0) / steps
     # reuse the already-warm jitted step: hits the compile cache instead of
     # eng.lower_train's fresh wrapper (which would recompile from scratch)
-    hlo = step.lower(params, opt, b, jnp.int32(0)).compile().as_text()
+    hlo = step.lower(state, b).compile().as_text()
 totals = hlo_analysis.analyze(hlo)
 print("SCALING_JSON " + json.dumps({
     "dp": dp, "pp": pp, "step_us": dt * 1e6,
     "bubble_frac": bubble_fraction(accum, pp),
     "coll": {k: v for k, v in totals.coll.items() if v},
     "coll_bytes": totals.coll_bytes,
-    "loss": float(out[2]["loss"]),
+    "loss": float(out[1]["loss"]),
 }))
 """
 
 
 def _run_layout(dp: int, pp: int) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={DEVICES}"
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(os.path.dirname(__file__), "..", "src"),
-         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    from benchmarks.common import child_env
     r = subprocess.run(
         [sys.executable, "-c", _CHILD, str(dp), str(pp), str(BATCH),
          str(ACCUM), str(STEPS)],
-        capture_output=True, text=True, timeout=1200, env=env)
+        capture_output=True, text=True, timeout=1200,
+        env=child_env(DEVICES))
     if r.returncode != 0:
         raise RuntimeError(
             f"scaling child dp={dp} pp={pp} failed:\n{r.stderr[-2000:]}")
@@ -103,4 +98,75 @@ def bench_scaling_layouts(rows):
             f"rel_step={res['step_us'] / base:.2f};{coll}")
 
 
-ALL = [bench_scaling_layouts]
+# host-data-path ablation: synchronous synth+device_put per step vs the
+# one-deep background Prefetcher (data/pipeline.py) overlapping both with
+# the running compiled step. Large batch so host synthesis is non-trivial.
+_PREFETCH_CHILD = r"""
+import json, sys, time
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core import sharding as shd
+from repro.core.engine import DistributedEngine
+from repro.data import DATASETS, DataPipeline
+from repro.launch.mesh import make_local_mesh
+
+batch, steps = int(sys.argv[1]), int(sys.argv[2])
+cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+mesh = make_local_mesh()
+ecfg = EngineConfig(train_batch_size=batch, total_steps=100, warmup_steps=1)
+eng = DistributedEngine(cfg, ecfg, mesh)
+pipe = DataPipeline(kind="image", global_batch=batch,
+                    dataset=DATASETS["cifar10"], resolution=cfg.image_size)
+state = eng.init_state(seed=0)
+step = eng.jit_train_step(donate=False)
+bshard = shd.named(mesh, shd.batch_specs(cfg, pipe.batch_shapes(), mesh))
+
+def run_sync():
+    s, e, i = state, 0, 0
+    for _ in range(steps):
+        b = pipe.device_put(pipe.batch_at(e, i), bshard)
+        s, m = step(s, b)
+        e, i = pipe.next_cursor(e, i)
+    return m
+
+def run_prefetch():
+    s = state
+    with pipe.prefetch(0, 0, shardings=bshard) as pf:
+        for _ in range(steps):
+            _, b, _ = next(pf)
+            s, m = step(s, b)
+    return m
+
+with mesh:
+    out = {}
+    for name, fn in (("off", run_sync), ("on", run_prefetch)):
+        fn()  # warmup (compile + thread spin-up)
+        t0 = time.time()
+        jax.block_until_ready(fn()["loss"])
+        out[name] = (time.time() - t0) / steps * 1e6
+print("PREFETCH_JSON " + json.dumps(out))
+"""
+
+
+def bench_data_prefetch(rows):
+    """prefetch_off vs prefetch_on step time for the vit smoke workload —
+    the satellite's host-data-overlap delta (CPU-relative numbers; the
+    overlap fraction is the signal)."""
+    from benchmarks.common import child_env
+    r = subprocess.run(
+        [sys.executable, "-c", _PREFETCH_CHILD, "256", "8"],
+        capture_output=True, text=True, timeout=1200,
+        env=child_env(DEVICES))
+    if r.returncode != 0:
+        raise RuntimeError(f"prefetch bench failed:\n{r.stderr[-2000:]}")
+    line = next(ln for ln in r.stdout.splitlines()
+                if ln.startswith("PREFETCH_JSON "))
+    res = json.loads(line[len("PREFETCH_JSON "):])
+    rows.append(f"prefetch_off,{res['off']:.2f},sync host synth+device_put")
+    rows.append(
+        f"prefetch_on,{res['on']:.2f},"
+        f"rel_step={res['on'] / res['off']:.3f};one-deep background "
+        f"prefetcher (data/pipeline.py)")
+
+
+ALL = [bench_scaling_layouts, bench_data_prefetch]

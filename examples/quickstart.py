@@ -29,7 +29,7 @@ def main():
                         dataset=DATASETS["cifar10"],
                         resolution=cfg.image_size)
 
-    params, opt_state = engine.init(seed=0)
+    state = engine.init_state(seed=0)          # params+opt+step+cursor+rng
     train_step = engine.jit_train_step(donate=False)
 
     print(f"model={cfg.name} params={cfg.param_count()/1e6:.2f}M "
@@ -39,8 +39,7 @@ def main():
             if step >= 40:
                 break
             batch = jax.tree.map(jnp.asarray, batch)
-            params, opt_state, m = train_step(params, opt_state, batch,
-                                              jnp.int32(step))
+            state, m = train_step(state, batch)
             if step % 10 == 0 or step == 39:
                 print(f"step {step:3d}  loss {float(m['loss']):.4f}  "
                       f"acc {float(m['acc']):.3f}  lr {float(m['lr']):.1e}")

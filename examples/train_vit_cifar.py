@@ -1,6 +1,6 @@
 """End-to-end driver (deliverable b): the paper's actual workload — ViT-B/16
 (86M params, the "~100M model") trained with data parallelism for a few
-hundred steps, with checkpointing and a metrics log.
+hundred steps, with elastic checkpointing and a metrics log.
 
 Full-size invocation (what a TPU/GPU host would run):
     PYTHONPATH=src python examples/train_vit_cifar.py --full --steps 300 \
@@ -8,6 +8,18 @@ Full-size invocation (what a TPU/GPU host would run):
 
 Default (CPU-friendly) runs the reduced ViT at the same code path:
     PYTHONPATH=src python examples/train_vit_cifar.py
+
+Preemption / resume: checkpoints are the full TrainState (params, optimizer
+moments, step, data cursor, rng) saved shard-locally every --ckpt-every
+steps by the async saver. Kill the run at any point and re-invoke with
+--resume to continue the exact loss trajectory — in the SAME layout or a
+different one (the restore reshards; e.g. interrupt a --devices 8 DDP run
+and resume it under --devices 4 --zero 3):
+
+    PYTHONPATH=src python examples/train_vit_cifar.py --steps 120
+    # ... preempted at step 60 ...
+    PYTHONPATH=src python examples/train_vit_cifar.py --steps 120 --resume \
+        --devices 4 --zero 3
 """
 import argparse
 import subprocess
@@ -25,6 +37,11 @@ def main():
     ap.add_argument("--dataset", default="cifar10",
                     choices=["cifar10", "cifar100", "imagenet100"])
     ap.add_argument("--zero", type=int, default=0)
+    ap.add_argument("--ckpt-every", type=int, default=20,
+                    help="async TrainState save cadence (steps)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint (any saved "
+                         "layout restores into this run's layout)")
     args = ap.parse_args()
 
     cmd = [sys.executable, "-m", "repro.launch.train",
@@ -33,12 +50,15 @@ def main():
            "--accum", str(args.accum), "--zero", str(args.zero),
            "--dataset", args.dataset,
            "--ckpt-dir", "/tmp/repro_vit_ckpt",
+           "--ckpt-every", str(args.ckpt_every),
            "--metrics-out", "/tmp/repro_vit_metrics.json",
            "--log-every", "20"]
     if not args.full:
         cmd.append("--smoke")
     if args.devices:
         cmd += ["--devices", str(args.devices)]
+    if args.resume:
+        cmd.append("--resume")
     print("->", " ".join(cmd))
     sys.exit(subprocess.call(cmd, env={**__import__("os").environ,
                                        "PYTHONPATH": "src"}))

@@ -1,31 +1,102 @@
+"""The paper's §V future work: "evaluate each ZeRO stage to measure memory
+savings and overhead".
+
+Default mode measures it from the compiled dry-run: per-device argument
+bytes (params + opt state + inputs) for ZeRO 0-3 on the 256-chip mesh.
+
+``--ckpt-sizes`` measures the ELASTIC CHECKPOINT footprint instead (the
+CI artifact next to the resume-parity check): per stage, a subprocess with
+8 host devices trains one step of the smoke ViT, saves the full TrainState
+shard-locally, and reports total bytes plus the max bytes any one device
+owns — the per-rank write cost a multi-host run would pay. ZeRO > 0
+shrinks the max-per-device column (optimizer state, and at stage 3 the
+params, spread over dp) while the total stays at logical size — the
+no-hidden-all-gather invariant of repro.checkpoint.
+"""
+import argparse
+import json
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import subprocess
+import sys
 
-# The paper's §V future work: "evaluate each ZeRO stage to measure memory
-# savings and overhead". This measures it from the compiled dry-run:
-# per-device argument bytes (params + opt state + inputs) for ZeRO 0-3.
+_CKPT_CHILD = r"""
+import json, sys, tempfile
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core.engine import DistributedEngine
+from repro.checkpoint import checkpoint_size_report
+from repro.launch.mesh import make_local_mesh
+from repro.launch.specs import concrete_batch
 
-import argparse   # noqa: E402
-import sys        # noqa: E402
+zero = int(sys.argv[1])
+cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+mesh = make_local_mesh()
+eng = DistributedEngine(cfg, EngineConfig(
+    train_batch_size=8, zero_stage=zero, total_steps=10, warmup_steps=1),
+    mesh)
+state = eng.init_state(seed=0)
+with mesh:
+    state, _ = eng.jit_train_step(donate=False)(
+        state, concrete_batch(cfg, 8, 16, seed=0))
+d = tempfile.mkdtemp()
+eng.save_state(d, state)
+rep = checkpoint_size_report(d, 1)
+print("CKPT_JSON " + json.dumps({
+    "zero": zero, "logical": rep["logical_bytes"],
+    "saved": rep["saved_bytes"],
+    "max_dev": max(rep["per_device_bytes"].values()),
+    "devices": len(rep["per_device_bytes"]),
+    "files": sum(rep["file_bytes"].values())}))
+"""
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.dryrun import run_pair  # noqa: E402
+def ckpt_sizes(devices: int = 8):
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path[:0] = [root, os.path.join(root, "src")]
+    from benchmarks.common import child_env
+
+    print(f"Checkpoint size per ZeRO stage — vit-b16 smoke TrainState, "
+          f"{devices} host devices (shard-local elastic format)\n")
+    print(f"{'stage':>6s} {'logical MiB':>12s} {'saved MiB':>10s} "
+          f"{'max/dev MiB':>12s} {'owning devs':>12s}")
+    ok = True
+    for stage in (0, 1, 2, 3):
+        r = subprocess.run(
+            [sys.executable, "-c", _CKPT_CHILD, str(stage)],
+            capture_output=True, text=True, timeout=1200,
+            env=child_env(devices))
+        if r.returncode != 0:
+            print(f"{stage:6d}  FAIL: {r.stderr[-200:]}")
+            ok = False
+            continue
+        rec = json.loads(next(
+            ln for ln in r.stdout.splitlines()
+            if ln.startswith("CKPT_JSON "))[len("CKPT_JSON "):])
+        mib = 2 ** 20
+        print(f"{stage:6d} {rec['logical']/mib:12.2f} "
+              f"{rec['saved']/mib:10.2f} {rec['max_dev']/mib:12.2f} "
+              f"{rec['devices']:12d}")
+        assert rec["saved"] == rec["logical"], \
+            f"stage {stage}: saved {rec['saved']} != logical " \
+            f"{rec['logical']} (replica written twice or shard missing)"
+    if not ok:
+        sys.exit(1)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-14b")
-    ap.add_argument("--shape", default="train_4k")
-    args = ap.parse_args()
+def dryrun_table(arch: str, shape: str):
+    # 512 host devices MUST be set before any jax-importing import (jax
+    # locks the device count on first init; the dry-run contract)
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch.dryrun import run_pair
 
-    print(f"ZeRO memory table — {args.arch} x {args.shape}, 256 chips "
+    print(f"ZeRO memory table — {arch} x {shape}, 256 chips "
           "(16 dp x 16 tp)\n")
     print(f"{'stage':>6s} {'args GiB/dev':>14s} {'peak GiB/dev':>14s} "
           f"{'coll GB/step':>14s} {'bound s':>10s}")
     for stage in (0, 1, 2, 3):
         try:
-            rec = run_pair(args.arch, args.shape, zero=stage, verbose=False,
+            rec = run_pair(arch, shape, zero=stage, verbose=False,
                            tag=f"zero{stage}")
         except Exception as e:  # noqa: BLE001 — stage 0 may OOM-by-design
             print(f"{stage:6d}  FAIL: {type(e).__name__}: {str(e)[:70]}")
@@ -37,6 +108,20 @@ def main():
         print(f"{stage:6d} {rec['argument_bytes_per_dev']/2**30:14.2f} "
               f"{rec['peak_bytes_per_dev']/2**30:14.2f} {coll:14.1f} "
               f"{rec['roofline']['bound_step_s']:10.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--ckpt-sizes", action="store_true",
+                    help="measure shard-local checkpoint bytes per ZeRO "
+                         "stage instead of the compiled dry-run table")
+    args = ap.parse_args()
+    if args.ckpt_sizes:
+        ckpt_sizes()
+    else:
+        dryrun_table(args.arch, args.shape)
 
 
 if __name__ == "__main__":

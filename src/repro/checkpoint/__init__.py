@@ -1,4 +1,6 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    checkpoint_size_report,
     latest_step,
     restore_checkpoint,
     save_checkpoint,

@@ -192,6 +192,11 @@ class EngineConfig:
     pipeline_stages: int = 1
     cast_params_bf16: bool = False      # §Perf: bf16 gather, f32 master
     embed_sharding: str = "vocab"       # vocab | dmodel (§Perf)
+    # elastic checkpointing (repro.checkpoint): cadence in optimizer steps
+    # (0 = end-of-run only) and the async saver's bounded in-flight count
+    ckpt_every: int = 0
+    ckpt_async: bool = True
+    ckpt_max_in_flight: int = 2
 
     def derived_micro_batch(self, dp_world: int) -> int:
         if self.micro_batch_per_gpu:
@@ -231,6 +236,14 @@ class EngineConfig:
                 raise ValueError(
                     "pipeline_stages > 1 does not implement the "
                     "cast_params_bf16 fp32-grad-accumulation policy")
+        if self.ckpt_every < 0:
+            raise ValueError(
+                f"ckpt_every must be >= 0 (0 = end-of-run only): "
+                f"{self.ckpt_every}")
+        if self.ckpt_max_in_flight < 1:
+            raise ValueError(
+                f"ckpt_max_in_flight must be >= 1: "
+                f"{self.ckpt_max_in_flight}")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

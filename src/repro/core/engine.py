@@ -6,6 +6,16 @@ gradient_accumulation_steps × dp_world), gradient accumulation, ZeRO-stage
 sharding specs, optimizer, LR schedule, and the pjit'd train / prefill /
 decode step functions. ``lower_*`` methods return jax.stages.Lowered for the
 multi-pod dry-run and roofline extraction.
+
+Training flows through an explicit :class:`TrainState` pytree — params,
+optimizer state, step (also the LR-schedule position), the data-pipeline
+cursor ``(epoch, batch_index)`` naming the NEXT batch to consume, and the
+base PRNG key — instead of loose ``(params, opt_state)`` tuples. The whole
+state is what the elastic checkpoint layer (``repro.checkpoint``) saves and
+restores: because every leaf carries its sharding, saves are shard-local
+(each process writes only addressable shards) and restores reshard into
+whatever dp×pp×ZeRO layout the restoring engine runs
+(``DistributedEngine.restore_state``).
 """
 from __future__ import annotations
 
@@ -24,6 +34,62 @@ from repro.core.grad_accum import _constrain_tree, accumulate_gradients
 from repro.models import shardctx
 from repro.models import transformer as model
 from repro.optim import make_optimizer, make_schedule
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class TrainState:
+    """The complete training state, as one pytree.
+
+    Fields:
+      params       model parameters (sharded per ZeRO/tp/pp specs)
+      opt_state    optimizer state (OptState; ZeRO-sharded)
+      step         int32 optimizer step — also the LR-schedule position
+      epoch        int32 data-pipeline epoch of the NEXT batch to consume
+      batch_index  int32 within-epoch index of the NEXT batch to consume
+      rng          base PRNG key; per-step streams derive via
+                   ``fold_in(rng, step)`` so a restored state reproduces
+                   the exact future randomness without mutating the key
+
+    The cursor convention makes checkpoints resumable mid-epoch: the saved
+    ``(epoch, batch_index)`` names the first batch the resumed run feeds.
+    ``step``/``epoch``/``batch_index`` duplicate nothing — ``opt_state.step``
+    counts optimizer updates (equal to ``step``), while the cursor is owned
+    by the host data loop (`launch/train.py`) and passes through the jitted
+    step unchanged.
+    """
+    _fields = ("params", "opt_state", "step", "epoch", "batch_index", "rng")
+    __slots__ = _fields
+
+    def __init__(self, *, params, opt_state, step, epoch, batch_index, rng):
+        self.params = params
+        self.opt_state = opt_state
+        self.step = step
+        self.epoch = epoch
+        self.batch_index = batch_index
+        self.rng = rng
+
+    def replace(self, **kw) -> "TrainState":
+        vals = {f: getattr(self, f) for f in self._fields}
+        bad = set(kw) - set(self._fields)
+        if bad:
+            raise TypeError(f"unknown TrainState fields: {sorted(bad)}")
+        vals.update(kw)
+        return TrainState(**vals)
+
+    def tree_flatten_with_keys(self):
+        children = [(jax.tree_util.GetAttrKey(f), getattr(self, f))
+                    for f in self._fields]
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(**dict(zip(cls._fields, children)))
+
+    def __repr__(self):
+        return ("TrainState(" + ", ".join(
+            f"{f}={jax.tree_util.tree_structure(getattr(self, f))}"
+            for f in self._fields) + ")")
 
 
 class DistributedEngine:
@@ -88,26 +154,80 @@ class DistributedEngine:
         opt = jax.eval_shape(self.optimizer.init, params)
         return params, opt
 
-    def init(self, seed: int = 0):
-        """Sharded parameter + optimizer-state init on the mesh."""
-        pshapes, _ = self.init_abstract()
-        pshard = self.param_shardings(pshapes)
-        oshard = self.opt_shardings(pshapes)
+    def abstract_state(self) -> TrainState:
+        """ShapeDtypeStruct pytree of the full TrainState (the restore
+        template: logical shapes + dtypes, values ignored)."""
+        params, opt = self.init_abstract()
+        scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        return TrainState(params=params, opt_state=opt, step=scalar,
+                          epoch=scalar, batch_index=scalar,
+                          rng=jax.ShapeDtypeStruct((2,), jnp.uint32))
 
-        @functools.partial(jax.jit,
-                           out_shardings=(pshard, oshard))
+    def state_shardings(self) -> TrainState:
+        """NamedSharding pytree for the TrainState under THIS engine's
+        layout — the resharding target for elastic restore."""
+        pshapes = self.init_abstract()[0]
+        rep = NamedSharding(self.mesh, P())
+        return TrainState(params=self.param_shardings(pshapes),
+                          opt_state=self.opt_shardings(pshapes),
+                          step=rep, epoch=rep, batch_index=rep, rng=rep)
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        """Sharded init of the full training state on the mesh."""
+        sshard = self.state_shardings()
+
+        @functools.partial(jax.jit, out_shardings=sshard)
         def _init(key):
             params = model.init_params(self.cfg, key)
-            return params, self.optimizer.init(params)
+            zero = jnp.int32(0)
+            return TrainState(
+                params=params, opt_state=self.optimizer.init(params),
+                step=zero, epoch=zero, batch_index=zero,
+                # distinct stream from the init key so future stochastic
+                # regularizers never correlate with the init draw
+                rng=jax.random.fold_in(key, 1))
 
         with self.mesh:
             return _init(jax.random.PRNGKey(seed))
 
     # ------------------------------------------------------------------
+    # checkpointing (elastic, shard-local — repro.checkpoint)
+    # ------------------------------------------------------------------
+
+    def save_state(self, ckpt_dir: str, state: TrainState) -> str:
+        """Synchronous shard-local save of the full state; the directory
+        name is taken from ``state.step``."""
+        from repro.checkpoint import save_checkpoint
+        return save_checkpoint(ckpt_dir, int(jax.device_get(state.step)),
+                               state)
+
+    def restore_state(self, ckpt_dir: str,
+                      step: Optional[int] = None) -> TrainState:
+        """Elastic restore: reassemble logical arrays from the shard index
+        maps and reshard into THIS engine's layout — the source run may
+        have used any dp×pp×ZeRO layout."""
+        from repro.checkpoint import latest_step, restore_checkpoint
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step < 0:
+                raise FileNotFoundError(
+                    f"no checkpoint step_* directories in {ckpt_dir!r}")
+        return restore_checkpoint(ckpt_dir, step, self.abstract_state(),
+                                  shardings=self.state_shardings())
+
+    def make_checkpointer(self):
+        """Async double-buffered checkpointer configured from EngineConfig
+        (bounded in-flight saves; cadence is the caller's ``ckpt_every``)."""
+        from repro.checkpoint import AsyncCheckpointer
+        return AsyncCheckpointer(
+            max_in_flight=self.ecfg.ckpt_max_in_flight)
+
+    # ------------------------------------------------------------------
     # train step
     # ------------------------------------------------------------------
 
-    def _train_step(self, params, opt_state, batch, step):
+    def _train_step(self, state: TrainState, batch):
+        params, opt_state = state.params, state.opt_state
         if self.ecfg.cast_params_bf16:
             # ZeRO-3 §Perf optimization: convert the f32 master shards
             # to bf16 BEFORE GSPMD's per-layer all-gather — halves
@@ -129,22 +249,36 @@ class DistributedEngine:
             # leading stage axis the (B,S,D) hints don't describe; GSPMD
             # infers layouts from the pipe/dp constraints instead. ZeRO
             # still composes: grads get the same dp-sharded constraint.
+            # (No per-microbatch rngs: the AD-through-scan pipeline is
+            # deterministic-only — see pipelined_loss.)
             grads, metrics = self._pipeline_grads(compute_params, batch,
                                                   gspecs)
         else:
             with shardctx.use(self.hints):
-                def mb_loss(p, mb):
+                # per-step, per-microbatch PRNG streams derived from the
+                # state's base key: fold_in(rng, step) makes resumes
+                # reproduce future randomness exactly (the key itself
+                # never mutates). Deterministic archs ignore them (DCE'd).
+                mb_rngs = jax.random.split(
+                    jax.random.fold_in(state.rng, state.step),
+                    self.ecfg.gradient_accumulation_steps)
+
+                def mb_loss(p, mb, rng):
+                    del rng  # hook for dropout-style regularizers
                     return model.loss_fn(self.cfg, p, mb)
                 grads, metrics = accumulate_gradients(
                     mb_loss, compute_params, batch,
-                    self.ecfg.gradient_accumulation_steps, grad_specs=gspecs)
-        lr = self.schedule(step)
+                    self.ecfg.gradient_accumulation_steps, grad_specs=gspecs,
+                    rngs=mb_rngs)
+        lr = self.schedule(state.step)
         new_params, new_opt, gnorm = self.optimizer.update(
             grads, opt_state, params, lr)
         metrics = dict(metrics)
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr
-        return new_params, new_opt, metrics
+        new_state = state.replace(params=new_params, opt_state=new_opt,
+                                  step=state.step + 1)
+        return new_state, metrics
 
     def _pipeline_grads(self, compute_params, batch, gspecs):
         """Mean grads + metrics via the 1F1B pipelined loss — numerically
@@ -166,28 +300,25 @@ class DistributedEngine:
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         return _constrain_tree(grads, gspecs), metrics
 
-    def jit_train_step(self, param_shapes=None, batch_shapes=None,
-                       donate=True):
-        pshapes = param_shapes or self.init_abstract()[0]
-        pshard = self.param_shardings(pshapes)
-        oshard = self.opt_shardings(pshapes)
-        in_shardings = (pshard, oshard,
+    def jit_train_step(self, batch_shapes=None, donate=True):
+        """jit'd ``(TrainState, batch) -> (TrainState, metrics)``. The data
+        cursor (epoch/batch_index) passes through unchanged — the host loop
+        advances it via ``state.replace`` after each step."""
+        sshard = self.state_shardings()
+        in_shardings = (sshard,
                         shd.named(self.mesh, shd.batch_specs(
                             self.cfg, batch_shapes, self.mesh))
-                        if batch_shapes is not None else None,
-                        NamedSharding(self.mesh, P()))
+                        if batch_shapes is not None else None)
         return jax.jit(
             self._train_step,
             in_shardings=in_shardings,
-            out_shardings=(pshard, oshard, None),
-            donate_argnums=(0, 1) if donate else ())
+            out_shardings=(sshard, None),
+            donate_argnums=(0,) if donate else ())
 
-    def lower_train(self, batch_shapes, step_shape=None):
-        pshapes, oshapes = self.init_abstract()
-        step = step_shape or jax.ShapeDtypeStruct((), jnp.int32)
-        fn = self.jit_train_step(pshapes, batch_shapes, donate=False)
+    def lower_train(self, batch_shapes):
+        fn = self.jit_train_step(batch_shapes, donate=False)
         with self.mesh:
-            return fn.lower(pshapes, oshapes, batch_shapes, step)
+            return fn.lower(self.abstract_state(), batch_shapes)
 
     # ------------------------------------------------------------------
     # serving (prefill / decode)

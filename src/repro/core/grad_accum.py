@@ -54,7 +54,7 @@ def _constrain_tree(tree, specs):
 
 
 def accumulate_gradients(loss_fn, params, batch, accum: int,
-                         grad_specs=None):
+                         grad_specs=None, rngs=None):
     """loss_fn(params, microbatch) -> (loss, metrics).
 
     Returns (mean grads fp32, mean metrics). One fwd+bwd per micro-batch,
@@ -65,18 +65,33 @@ def accumulate_gradients(loss_fn, params, batch, accum: int,
     accumulator. Constraining it dp-sharded makes GSPMD REDUCE-SCATTER each
     micro-step's gradients into a 1/dp-sized carry instead of all-reducing
     into a replicated one — this is exactly DeepSpeed ZeRO stage 2.
+
+    rngs: optional ``(accum, ...)`` stack of per-microbatch PRNG keys; when
+    given, ``loss_fn`` is called as ``loss_fn(params, mb, rng)`` with its
+    microbatch's key (the TrainState rng plumbing — the engine derives the
+    stack from ``fold_in(state.rng, state.step)``, so the same microbatch
+    always sees the same key, resumed or not). Deterministic losses that
+    ignore the key cost nothing: XLA dead-code-eliminates the stream.
     """
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if rngs is None:
+        def fn(p, mb, rng):
+            del rng
+            return loss_fn(p, mb)
+        rngs = jnp.zeros((accum, 1), jnp.uint32)    # placeholder, DCE'd
+    else:
+        fn = loss_fn
+    grad_fn = jax.value_and_grad(fn, has_aux=True)
 
     if accum == 1:
-        (loss, metrics), grads = grad_fn(params, batch)
+        (loss, metrics), grads = grad_fn(params, batch, rngs[0])
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         return _constrain_tree(grads, grad_specs), metrics
 
     mbs = split_microbatches(batch, accum)
 
-    def body(acc, mb):
-        (loss, metrics), grads = grad_fn(params, mb)
+    def body(acc, mb_rng):
+        mb, rng = mb_rng
+        (loss, metrics), grads = grad_fn(params, mb, rng)
         acc = jax.tree.map(
             lambda a, g: a + g.astype(jnp.float32) / accum, acc, grads)
         return _constrain_tree(acc, grad_specs), metrics
@@ -84,6 +99,6 @@ def accumulate_gradients(loss_fn, params, batch, accum: int,
     zero = _constrain_tree(
         jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
         grad_specs)
-    grads, metrics = jax.lax.scan(body, zero, mbs)
+    grads, metrics = jax.lax.scan(body, zero, (mbs, rngs))
     metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
     return grads, metrics

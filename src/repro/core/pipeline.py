@@ -202,7 +202,7 @@ def stage_stack_specs(stack_specs, stages_axis=PIPE_AXIS):
 
 def pipelined_loss(cfg, params, batch, *, stages: int, num_micro: int,
                    dp_axes=("data",), pipe_axis: Optional[str] = PIPE_AXIS,
-                   stack_specs=None):
+                   stack_specs=None, rngs=None):
     """1F1B-scheduled pipeline-parallel loss: (loss, metrics).
 
     Matches ``accumulate_gradients(model.loss_fn, ...)`` numerically —
@@ -213,7 +213,24 @@ def pipelined_loss(cfg, params, batch, *, stages: int, num_micro: int,
     ``pipe_axis=None`` drops sharding constraints (semantics-only mode used
     by single-device tests); ``stack_specs`` optionally carries the engine's
     stage-local specs so ZeRO inner-dim sharding survives the reshape.
+
+    ``rngs`` exists for signature parity with ``accumulate_gradients`` but
+    must be None: the AD-through-scan pipeline re-derives each microbatch at
+    several ticks, so per-microbatch stochastic regularization would need
+    per-tick rng plumbing that does not exist yet.
+
+    Checkpoint note: the engine saves the UNRESHAPED ``params["stack"]``
+    leaves — the (L, ...) layout with L sharded over ``pipe`` — so the
+    elastic checkpoint layer sees plain sharded arrays. The per-stage
+    (S, L/S, ...) view built here is a transient inside the step; restores
+    into a different pp extent just re-slice the L axis via the target
+    engine's specs, no pipeline-specific resharding logic needed.
     """
+    if rngs is not None:
+        raise ValueError(
+            "pipelined_loss does not support per-microbatch rngs "
+            "(AD-through-scan replays microbatches across ticks; stochastic "
+            "regularization needs per-tick rng plumbing)")
     check_supported(cfg)
     stage_partition(cfg.num_layers, stages)     # validates divisibility
     S, M = stages, num_micro

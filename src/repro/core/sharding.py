@@ -163,6 +163,39 @@ def named(mesh, spec_tree):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def spec_to_lists(spec) -> list:
+    """JSON-serializable PartitionSpec: each dim None | "axis" |
+    ["axis", ...] — the manifest encoding the elastic checkpoint layer
+    records. Restore reshards against the TARGET engine's specs, so this
+    is provenance/accounting metadata, not a restore input."""
+    out = []
+    for ax in spec:
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, (tuple, list)):
+            out.append([str(a) for a in ax])
+        else:
+            out.append(str(ax))
+    return out
+
+
+def describe_sharding(x) -> Optional[dict]:
+    """Portable description of a jax.Array's sharding for the checkpoint
+    manifest: the PartitionSpec it lives under plus the mesh axis extents
+    (None for single-device / spec-less shardings)."""
+    s = getattr(x, "sharding", None)
+    spec = getattr(s, "spec", None)
+    if spec is None:
+        return None
+    mesh = getattr(s, "mesh", None)
+    return {
+        "spec": spec_to_lists(spec),
+        "mesh": dict(zip(mesh.axis_names,
+                         (int(n) for n in mesh.devices.shape)))
+        if mesh is not None else None,
+    }
+
+
 # ---------------------------------------------------------------------------
 # activations / batch / cache
 # ---------------------------------------------------------------------------

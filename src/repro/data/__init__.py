@@ -4,4 +4,4 @@ from repro.data.synthetic import (  # noqa: F401
     make_image_batch,
     make_token_batch,
 )
-from repro.data.pipeline import DataPipeline  # noqa: F401
+from repro.data.pipeline import DataPipeline, Prefetcher  # noqa: F401

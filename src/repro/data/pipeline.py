@@ -3,13 +3,23 @@
 Mirrors the paper's DataLoader-with-DistributedSampler setup: each dp rank
 sees a disjoint shard; weak-scaling mode subsets the dataset proportionally
 to world size (the paper's §IV-A weak-scaling protocol).
+
+Batches are **cursor-addressable**: ``batch_at(epoch, index)`` is a pure
+function of ``(seed, epoch, index)``, so the TrainState data cursor
+``(epoch, batch_index)`` saved by the elastic checkpoint layer names an
+exact batch — a resumed run replays the identical stream from mid-epoch.
+``Prefetcher`` overlaps next-batch synthesis + ``device_put`` with the
+running compiled step (one-deep background prefetch, DeepSpeed
+DataLoader-worker equivalent) while tracking the cursor for checkpointing.
 """
 from __future__ import annotations
 
 import math
+import queue
 import struct
+import threading
 import zlib
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Tuple
 
 import jax
 import numpy as np
@@ -47,15 +57,51 @@ class DataPipeline:
     def steps_per_epoch(self) -> int:
         return max(1, math.floor(self.epoch_size / self.global_batch))
 
-    def batches(self, epoch: int = 0) -> Iterator[dict]:
-        for i in range(self.steps_per_epoch):
-            seed = batch_seed(self.seed, epoch, i)
-            if self.kind == "image":
-                yield make_image_batch(self.dataset, self.global_batch,
-                                       seed=seed, resolution=self.resolution)
-            else:
-                yield make_token_batch(self.vocab, self.global_batch,
-                                       self.seq_len, seed=seed)
+    def batch_at(self, epoch: int, index: int) -> dict:
+        """The batch at data cursor ``(epoch, index)`` — pure in
+        ``(self.seed, epoch, index)``, the addressability contract the
+        checkpoint resume path depends on."""
+        if not 0 <= index < self.steps_per_epoch:
+            raise IndexError(
+                f"batch_index {index} out of range for epoch of "
+                f"{self.steps_per_epoch} steps")
+        seed = batch_seed(self.seed, epoch, index)
+        if self.kind == "image":
+            return make_image_batch(self.dataset, self.global_batch,
+                                    seed=seed, resolution=self.resolution)
+        return make_token_batch(self.vocab, self.global_batch,
+                                self.seq_len, seed=seed)
+
+    def batch_shapes(self) -> dict:
+        """ShapeDtypeStructs of one batch, without synthesizing it (for
+        deriving batch shardings before the first fetch)."""
+        b = self.global_batch
+        if self.kind == "image":
+            res = self.resolution or self.dataset.resolution
+            return {"images": jax.ShapeDtypeStruct((b, res, res, 3),
+                                                   np.float32),
+                    "labels": jax.ShapeDtypeStruct((b,), np.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, self.seq_len), np.int32)}
+
+    def next_cursor(self, epoch: int, index: int) -> Tuple[int, int]:
+        """Cursor of the batch after ``(epoch, index)`` — rolls the REAL
+        epoch counter (epoch+1, not a reused step count, so batch seeds
+        never repeat across epochs)."""
+        index += 1
+        if index >= self.steps_per_epoch:
+            return epoch + 1, 0
+        return epoch, index
+
+    def batches(self, epoch: int = 0, start: int = 0) -> Iterator[dict]:
+        for i in range(start, self.steps_per_epoch):
+            yield self.batch_at(epoch, i)
+
+    def prefetch(self, epoch: int = 0, index: int = 0, *, shardings=None,
+                 depth: int = 1) -> "Prefetcher":
+        """Background prefetcher starting at cursor ``(epoch, index)``
+        (e.g. a restored TrainState's cursor), rolling epochs forever."""
+        return Prefetcher(self, epoch, index, shardings=shardings,
+                          depth=depth)
 
     def device_put(self, batch, shardings=None):
         if shardings is None:
@@ -69,3 +115,76 @@ class DataPipeline:
             per = x.shape[0] // world
             return x[rank * per:(rank + 1) * per]
         return jax.tree.map(slc, batch)
+
+
+class Prefetcher:
+    """One-deep (configurable) background batch prefetcher.
+
+    A daemon thread synthesizes the next batch and ``device_put``s it
+    (against ``shardings`` when given, so arrival is already in the final
+    dp layout) while the compiled step runs on the current one — the data
+    path leaves the step critical path. ``next()`` yields
+    ``(cursor, batch, next_cursor)``: ``cursor`` is the position of the
+    yielded batch, ``next_cursor`` is what a checkpoint taken AFTER the
+    step consuming this batch must record as the TrainState data cursor.
+
+    Iterate forever (epochs roll automatically); ``close()`` (or the
+    context manager) stops the thread. Synthesis errors re-raise on the
+    consumer side.
+    """
+
+    def __init__(self, pipe: DataPipeline, epoch: int = 0, index: int = 0,
+                 *, shardings=None, depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1: {depth}")
+        self._pipe = pipe
+        self._shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(int(epoch), int(index)),
+            name="data-prefetch", daemon=True)
+        self._thread.start()
+
+    def _run(self, epoch: int, index: int):
+        try:
+            while not self._stop.is_set():
+                batch = self._pipe.batch_at(epoch, index)
+                batch = self._pipe.device_put(batch, self._shardings)
+                item = ((epoch, index), batch,
+                        self._pipe.next_cursor(epoch, index))
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(("ok", item), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                epoch, index = item[2]
+        except BaseException as e:  # noqa: BLE001 — re-raised by consumer
+            self._q.put(("error", e))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        kind, item = self._q.get()
+        if kind == "error":
+            raise RuntimeError("data prefetch thread failed") from item
+        return item
+
+    def close(self):
+        self._stop.set()
+        # unblock a producer stuck in put() by draining
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -49,7 +49,7 @@ def main():
     eng = DistributedEngine(cfg, EngineConfig(train_batch_size=dp), mesh)
 
     max_len = args.prompt_len + args.gen
-    params, _ = eng.init(seed=0)
+    params = eng.init_state(seed=0).params
     with mesh:
         cache = model.init_cache(cfg, args.batch, max_len, jnp.float32)
         prompt = jax.random.randint(jax.random.PRNGKey(0),

@@ -18,6 +18,24 @@ not with --seq-parallel.
 
 --seed seeds both parameter init and the EngineConfig so distributed
 layouts are loss-trajectory comparable run-to-run.
+
+Checkpointing & resume (elastic, shard-local — repro.checkpoint): the loop
+trains a single ``TrainState`` pytree (params, opt state, step, data
+cursor, rng). ``--ckpt-dir D --ckpt-every N`` saves the full state every N
+steps via the async double-buffered saver (off the step critical path;
+``--ckpt-sync`` forces blocking saves) and once more at exit.
+``--resume`` restores the latest state from ``--ckpt-dir`` — into THIS
+run's dp×pp×ZeRO layout, whatever layout wrote it — and continues the
+exact loss trajectory: same schedule position (state.step), same optimizer
+moments, and the same data stream from the saved ``(epoch, batch_index)``
+cursor. Keep --steps/--batch/--accum/--seed identical across save and
+resume; the layout flags (--devices/--zero/--pp/--model-axis) may change
+freely. ``--stop-after K`` ends the loop at step K while the LR schedule
+stays built for --steps — the "preempted run" half of the resume-parity CI
+check:
+
+    train --steps 6 --stop-after 3 --ckpt-dir D          # preempted
+    train --steps 6 --resume --ckpt-dir D                # same trajectory
 """
 from __future__ import annotations
 
@@ -59,17 +77,39 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="flash-attention Pallas kernels (custom-VJP train "
                          "path; interpret mode off-TPU)")
+    ap.add_argument("--dtype", default="",
+                    help="override compute dtype (e.g. float32 for the "
+                         "cross-layout resume-parity checks, where bf16 "
+                         "rounding would mask the comparison)")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save the full TrainState every N steps "
+                         "(0 = end-of-run only); async unless --ckpt-sync")
+    ap.add_argument("--ckpt-sync", action="store_true",
+                    help="blocking saves (debug / bench baseline)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in --ckpt-dir into "
+                         "this run's layout and continue the trajectory")
+    ap.add_argument("--resume-step", type=int, default=-1,
+                    help="restore this specific step instead of the latest")
+    ap.add_argument("--stop-after", type=int, default=0,
+                    help="stop at this absolute step while the LR schedule "
+                         "keeps --steps as its horizon (preemption "
+                         "simulation for resume tests)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="synchronous host data path (bench baseline)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args()
     _maybe_reexec(args.devices)
 
     import jax
+    import jax.numpy as jnp
     import numpy as np
 
-    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint import latest_step, save_checkpoint
     from repro.configs import EngineConfig, get_config, get_smoke_config
+    from repro.core import sharding as shd
     from repro.core.engine import DistributedEngine
     from repro.data import DATASETS, DataPipeline
     from repro.launch.mesh import make_local_mesh
@@ -77,6 +117,8 @@ def main():
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     if args.use_pallas:
         cfg = cfg.replace(use_pallas=True)
+    if args.dtype:
+        cfg = cfg.replace(dtype=args.dtype)
     if cfg.arch_type == "vit":
         cfg = cfg.replace(num_classes=DATASETS[args.dataset].num_classes)
     mesh = make_local_mesh(model=args.model_axis, pipe=args.pp)
@@ -87,7 +129,8 @@ def main():
         zero_stage=args.zero, optimizer=args.optimizer, lr=args.lr,
         total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
         sequence_parallel=args.seq_parallel, pipeline_stages=args.pp,
-        seed=args.seed)
+        seed=args.seed, ckpt_every=args.ckpt_every,
+        ckpt_async=not args.ckpt_sync)
     eng = DistributedEngine(cfg, ecfg, mesh)
     print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"devices={mesh.devices.size} dp={dp} pp={args.pp} "
@@ -97,45 +140,89 @@ def main():
     if cfg.arch_type == "vit":
         pipe = DataPipeline(kind="image", global_batch=args.batch,
                             dataset=DATASETS[args.dataset],
-                            resolution=cfg.image_size)
+                            resolution=cfg.image_size, seed=args.seed)
     else:
         pipe = DataPipeline(kind="token", global_batch=args.batch,
                             vocab=max(cfg.vocab_size, 2), seq_len=args.seq,
-                            epoch_size=args.batch * args.steps)
+                            epoch_size=args.batch * args.steps,
+                            seed=args.seed)
 
-    params, opt_state = eng.init(seed=args.seed)
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) >= 0:
+        state = eng.restore_state(
+            args.ckpt_dir,
+            step=args.resume_step if args.resume_step >= 0 else None)
+        print(f"[train] resumed step={int(state.step)} "
+              f"cursor=(epoch {int(state.epoch)}, "
+              f"batch {int(state.batch_index)}) from {args.ckpt_dir}")
+    else:
+        if args.resume:
+            print(f"[train] --resume: no checkpoint in "
+                  f"{args.ckpt_dir or '<unset>'}; starting fresh")
+        state = eng.init_state(seed=args.seed)
+    start_step = int(state.step)
+    end_step = min(args.steps, args.stop_after) if args.stop_after \
+        else args.steps
+
     step_fn = eng.jit_train_step()
+    saver = eng.make_checkpointer() if ecfg.ckpt_async else None
     hist = []
     t0 = time.time()
-    it = iter(pipe.batches())
-    import jax.numpy as jnp
-    with mesh:
-        for step in range(args.steps):
-            try:
-                batch = next(it)
-            except StopIteration:
-                it = iter(pipe.batches(epoch=step))
-                batch = next(it)
-            if cfg.arch_type == "audio":
-                from repro.launch.specs import concrete_batch
-                batch = concrete_batch(cfg, args.batch, args.seq, seed=step)
-            if cfg.arch_type == "vlm":
-                from repro.launch.specs import concrete_batch
-                batch = concrete_batch(cfg, args.batch, args.seq, seed=step)
-            batch = jax.tree.map(jnp.asarray, batch)
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch, jnp.int32(step))
-            if step % args.log_every == 0 or step == args.steps - 1:
-                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
-                m["step"] = step
-                m["wall_s"] = round(time.time() - t0, 2)
-                hist.append(m)
-                print(f"[train] step {step:5d} loss={m['loss']:.4f} "
-                      f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
-                      f"({m['wall_s']:.1f}s)")
-    if args.ckpt_dir:
-        path = save_checkpoint(args.ckpt_dir, args.steps,
-                               {"params": params})
+
+    # cursor-addressable data: vit/token archs ride the background
+    # prefetcher; audio/vlm use spec-derived synthetic batches addressed
+    # directly by the global step (epoch stays 0 — one endless "epoch")
+    cursor_data = cfg.arch_type not in ("audio", "vlm")
+    prefetcher = None
+    if cursor_data and not args.no_prefetch and start_step < end_step:
+        bshard = shd.named(mesh, shd.batch_specs(cfg, pipe.batch_shapes(),
+                                                 mesh))
+        prefetcher = pipe.prefetch(int(state.epoch), int(state.batch_index),
+                                   shardings=bshard)
+
+    def fetch(step):
+        """-> (batch, cursor-after-this-step)"""
+        if not cursor_data:
+            from repro.launch.specs import concrete_batch
+            batch = concrete_batch(cfg, args.batch, args.seq, seed=step)
+            return jax.tree.map(jnp.asarray, batch), (0, step + 1)
+        if prefetcher is not None:
+            _, batch, nxt = next(prefetcher)
+            return batch, nxt
+        e, i = int(state.epoch), int(state.batch_index)
+        batch = pipe.device_put(pipe.batch_at(e, i))
+        return batch, pipe.next_cursor(e, i)
+
+    try:
+        with mesh:
+            for step in range(start_step, end_step):
+                batch, nxt = fetch(step)
+                state, metrics = step_fn(state, batch)
+                # roll the data cursor on the host — the jitted step passes
+                # it through; a checkpoint taken now names the NEXT batch
+                state = state.replace(epoch=jnp.int32(nxt[0]),
+                                      batch_index=jnp.int32(nxt[1]))
+                if step % args.log_every == 0 or step == end_step - 1:
+                    m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                    m["step"] = step
+                    m["wall_s"] = round(time.time() - t0, 2)
+                    hist.append(m)
+                    print(f"[train] step {step:5d} loss={m['loss']:.4f} "
+                          f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
+                          f"({m['wall_s']:.1f}s)")
+                if args.ckpt_dir and ecfg.ckpt_every and \
+                        (step + 1) % ecfg.ckpt_every == 0:
+                    if saver is not None:
+                        saver.save(args.ckpt_dir, step + 1, state)
+                    else:
+                        save_checkpoint(args.ckpt_dir, step + 1, state)
+    finally:
+        if prefetcher is not None:
+            prefetcher.close()
+
+    if saver is not None:
+        saver.wait()                    # drain in-flight async saves
+    if args.ckpt_dir and latest_step(args.ckpt_dir) != int(state.step):
+        path = save_checkpoint(args.ckpt_dir, int(state.step), state)
         print(f"[train] checkpoint -> {path}")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
@@ -143,8 +230,9 @@ def main():
     # final sanity: loss decreased
     if len(hist) >= 2 and not (hist[-1]["loss"] < hist[0]["loss"]):
         print("[train] WARNING: loss did not decrease")
-    print(f"[train] done in {time.time()-t0:.1f}s; "
-          f"final loss {hist[-1]['loss']:.4f}")
+    final = f"final loss {hist[-1]['loss']:.4f}" if hist \
+        else f"no steps run (start={start_step}, end={end_step})"
+    print(f"[train] done in {time.time()-t0:.1f}s; {final}")
 
 
 if __name__ == "__main__":

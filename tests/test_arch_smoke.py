@@ -39,19 +39,20 @@ def test_one_train_step(arch):
     mesh = make_local_mesh()
     eng = DistributedEngine(
         cfg, EngineConfig(train_batch_size=B, total_steps=10), mesh)
-    params, opt_state = eng.init(seed=0)
+    state = eng.init_state(seed=0)
     step = eng.jit_train_step(donate=False)
     batch = _batch(cfg)
     with mesh:
-        p2, o2, metrics = step(params, opt_state, batch, jnp.int32(0))
+        s2, metrics = step(state, batch)
     loss = float(metrics["loss"])
     assert np.isfinite(loss) and loss > 0
     assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(s2.step) == int(state.step) + 1
     # params actually changed
     delta = jax.tree.map(
         lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
                                            - b.astype(jnp.float32)))),
-        params, p2)
+        state.params, s2.params)
     assert max(jax.tree.leaves(delta)) > 0
 
 
@@ -94,7 +95,7 @@ def test_loss_decreases_vit():
     pipe = DataPipeline(kind="image", global_batch=16,
                         dataset=DATASETS["cifar10"],
                         resolution=cfg.image_size)
-    params, opt = eng.init(seed=0)
+    state = eng.init_state(seed=0)
     step = eng.jit_train_step(donate=False)
     losses = []
     with mesh:
@@ -102,6 +103,6 @@ def test_loss_decreases_vit():
             if i >= 30:
                 break
             batch = jax.tree.map(jnp.asarray, batch)
-            params, opt, m = step(params, opt, batch, jnp.int32(i))
+            state, m = step(state, batch)
             losses.append(float(m["loss"]))
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses

@@ -55,3 +55,62 @@ def test_batches_identical_across_hashseed_processes(tmp_path):
         assert r.returncode == 0, r.stderr
         outs.append(r.stdout)
     assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# cursor-addressable batches + background prefetcher (the TrainState data
+# cursor contract: (epoch, batch_index) names an exact batch)
+# ---------------------------------------------------------------------------
+
+def _pipe(epoch_size=32):
+    return DataPipeline(kind="image", global_batch=8, seed=5,
+                        dataset=DATASETS["cifar10"], epoch_size=epoch_size)
+
+
+def test_batch_at_matches_batches_iterator():
+    p = _pipe()
+    for i, b in enumerate(p.batches(epoch=2)):
+        ref = p.batch_at(2, i)
+        np.testing.assert_array_equal(b["images"], ref["images"])
+        np.testing.assert_array_equal(b["labels"], ref["labels"])
+    with pytest.raises(IndexError):
+        p.batch_at(0, p.steps_per_epoch)
+
+
+def test_next_cursor_rolls_real_epochs():
+    """Epoch rollover must advance the epoch counter (not reuse a step
+    count), so batch seeds never collide across epochs."""
+    p = _pipe()
+    spe = p.steps_per_epoch
+    assert p.next_cursor(0, 0) == (0, 1)
+    assert p.next_cursor(0, spe - 1) == (1, 0)
+    assert p.next_cursor(7, spe - 1) == (8, 0)
+    seeds = {batch_seed(p.seed, e, i) for e in range(3) for i in range(spe)}
+    assert len(seeds) == 3 * spe
+
+
+def test_prefetcher_matches_sync_stream_and_rolls_epochs():
+    """The background prefetcher yields the identical batch stream as
+    synchronous cursor fetches, including across an epoch boundary, and
+    reports the cursor a post-step checkpoint must record."""
+    p = _pipe(epoch_size=24)            # 3 steps/epoch
+    n = 7                               # crosses two epoch boundaries
+    with p.prefetch(0, 1) as pf:        # start mid-epoch, like a resume
+        got = [next(pf) for _ in range(n)]
+    cur = (0, 1)
+    for cursor, batch, nxt in got:
+        assert cursor == cur
+        ref = p.batch_at(*cursor)
+        np.testing.assert_array_equal(np.asarray(batch["images"]),
+                                      ref["images"])
+        assert nxt == p.next_cursor(*cursor)
+        cur = nxt
+    assert got[-1][0] == (2, 1)
+
+
+def test_prefetcher_propagates_synthesis_errors():
+    p = _pipe()
+    p.dataset = None                    # synthesis will blow up
+    with p.prefetch(0, 0) as pf:
+        with pytest.raises(RuntimeError, match="prefetch thread failed"):
+            next(pf)

@@ -131,3 +131,42 @@ def test_constrain_tree_applies_under_mesh():
         out = jax.jit(
             lambda x: grad_accum._constrain_tree(x, {"w": P("data")}))(x)
     assert out["w"].sharding == NamedSharding(mesh, P("data"))
+
+
+# ---------------------------------------------------------------------------
+# per-microbatch rng threading (the TrainState rng plumbing)
+# ---------------------------------------------------------------------------
+
+def test_rngs_are_inert_for_deterministic_losses():
+    """Passing rngs to a loss that ignores them must not change gradients
+    (the engine always threads them; deterministic archs DCE the stream)."""
+    params = {"w": jnp.arange(4.0)}
+    batch = {"x": jnp.arange(8.0).reshape(8, 1)}
+
+    def loss_no_rng(p, mb):
+        return jnp.mean(mb["x"] * p["w"]), {}
+
+    def loss_rng(p, mb, rng):
+        del rng
+        return loss_no_rng(p, mb)
+
+    g0, _ = accumulate_gradients(loss_no_rng, params, batch, 4)
+    rngs = jax.random.split(jax.random.PRNGKey(0), 4)
+    g1, _ = accumulate_gradients(loss_rng, params, batch, 4, rngs=rngs)
+    np.testing.assert_array_equal(np.asarray(g0["w"]), np.asarray(g1["w"]))
+
+
+@pytest.mark.parametrize("accum", [1, 4])
+def test_rngs_deliver_per_microbatch_keys(accum):
+    """Each microbatch must see ITS key: a loss whose gradient is the
+    rng draw itself reconstructs exactly the mean over the key stack."""
+    params = {"w": jnp.zeros(())}
+    batch = {"x": jnp.zeros((accum,))}
+    rngs = jax.random.split(jax.random.PRNGKey(7), accum)
+
+    def loss(p, mb, rng):
+        return p["w"] * jax.random.uniform(rng, ()), {}
+
+    g, _ = accumulate_gradients(loss, params, batch, accum, rngs=rngs)
+    want = np.mean([float(jax.random.uniform(r, ())) for r in rngs])
+    np.testing.assert_allclose(float(g["w"]), want, rtol=1e-6)

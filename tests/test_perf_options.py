@@ -77,14 +77,13 @@ def test_perf_option_training_still_learns(opt):
     eng = DistributedEngine(cfg, EngineConfig(
         train_batch_size=8, lr=3e-3, total_steps=20, warmup_steps=2, **opt),
         mesh)
-    params, opt_state = eng.init(seed=0)
+    state = eng.init_state(seed=0)
     step = eng.jit_train_step(donate=False)
     losses = []
     with mesh:
         for i in range(12):
             batch = concrete_batch(cfg, 8, 32, seed=0)  # fixed batch
-            params, opt_state, m = step(params, opt_state, batch,
-                                        jnp.int32(i))
+            state, m = step(state, batch)
             losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] - 0.05, losses
     assert np.isfinite(losses).all()

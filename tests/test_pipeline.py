@@ -191,13 +191,13 @@ def run_steps(arch, pp, zero=0, steps=3, accum=4, layers=4):
                         zero_stage=zero, lr=1e-3, total_steps=10,
                         warmup_steps=1, pipeline_stages=pp)
     eng = DistributedEngine(cfg, ecfg, mesh)
-    params, opt = eng.init(seed=0)
+    state = eng.init_state(seed=0)
     step = eng.jit_train_step(donate=False)
     losses = []
     with mesh:
         for i in range(steps):
             batch = concrete_batch(cfg, 32, 32, seed=i)
-            params, opt, m = step(params, opt, batch, jnp.int32(i))
+            state, m = step(state, batch)
             losses.append(float(m["loss"]))
     return losses
 """

@@ -1,9 +1,17 @@
 """Checkpoint, data pipeline, schedules, HLO analyzer."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
 from repro.data import DATASETS, DataPipeline
 from repro.data.synthetic import make_image_batch, make_token_batch
 from repro.launch import hlo_analysis
@@ -20,6 +28,60 @@ def test_checkpoint_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+def test_checkpoint_strict_key_mismatch(tmp_path):
+    """Missing AND unexpected leaves must raise KeyError naming the
+    offending paths — never a silent partial restore."""
+    tree = {"a": jnp.zeros((2,)), "b": {"x": jnp.ones((3,))}}
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = {"a": jnp.zeros((2,)), "b": {"y": jnp.ones((3,))}}
+    with pytest.raises(KeyError) as e:
+        restore_checkpoint(str(tmp_path), 1, bad)
+    assert "b/y" in str(e.value) and "b/x" in str(e.value)
+
+
+def test_checkpoint_strict_shape_dtype_mismatch(tmp_path):
+    """Shape/dtype drift must raise with BOTH sides printed (all offenders
+    listed), not crash in a reshape."""
+    tree = {"w": jnp.zeros((4, 4), jnp.float32),
+            "s": jnp.zeros((2,), jnp.bfloat16)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = {"w": jnp.zeros((4, 8), jnp.float32),
+           "s": jnp.zeros((2,), jnp.float32)}
+    with pytest.raises(ValueError) as e:
+        restore_checkpoint(str(tmp_path), 1, bad)
+    msg = str(e.value)
+    assert "w" in msg and "(4, 4)" in msg and "(4, 8)" in msg
+    assert "s" in msg and "bfloat16" in msg and "float32" in msg
+
+
+def test_async_checkpointer_roundtrip(tmp_path):
+    """Async saves land complete (atomic rename: no *.tmp left behind),
+    restore bit-identically, and respect the in-flight bound."""
+    ckpt = AsyncCheckpointer(max_in_flight=2)
+    trees = {}
+    for step in (1, 2, 3):
+        trees[step] = {"w": jnp.full((8, 8), float(step)),
+                       "n": {"b": jnp.arange(step + 1)}}
+        ckpt.save(str(tmp_path), step, trees[step])
+    ckpt.wait()
+    assert latest_step(str(tmp_path)) == 3
+    assert not [d for d in os.listdir(tmp_path) if ".tmp" in d]
+    for step in (1, 3):
+        out = restore_checkpoint(str(tmp_path), step, trees[step])
+        for a, b in zip(jax.tree.leaves(trees[step]), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpointer_surfaces_write_errors(tmp_path):
+    """A failed background write must raise on wait(), not vanish."""
+    ckpt = AsyncCheckpointer()
+    # a FILE where the tmp staging dir must go -> background mkdir fails
+    (tmp_path / "step_00000001.tmp").write_text("in the way")
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(())})
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        ckpt.wait()
 
 
 def test_data_determinism_and_structure():
