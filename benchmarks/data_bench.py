@@ -1,0 +1,202 @@
+"""Data & evaluation suite: the real-image workload as a tracked artifact
+(``BENCH_data.json``) — samples/sec of the procedural-CIFAR ViT smoke
+workload per dp x pp layout, augmentation on/off, the host-prefetch x
+augmentation interaction, and sharded-eval throughput.
+
+Same shape as the scaling suite: each measurement runs in a subprocess
+(host device count is fixed at jax init) and prints one JSON line the
+parent turns into ``name,us_per_call,derived`` rows. CPU-host numbers are
+substrate-relative; the layout/aug/prefetch *ratios* are the signal the
+paper reports (per-layout samples/sec + accuracy as the joint scaling
+metric).
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+DEVICES = 8
+BATCH = 32
+ACCUM = 4
+STEPS = 3
+# dp x pp layouts; augmentation only composes with pp=1 (the 1F1B path has
+# no per-microbatch rng stream), so pp>1 rows are aug-off by construction
+TRAIN_CASES = (
+    (8, 1, 0), (8, 1, 1),
+    (4, 2, 0), (2, 4, 0),
+)
+
+_TRAIN_CHILD = r"""
+import json, sys, time
+import jax
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core import sharding as shd
+from repro.core.engine import DistributedEngine
+from repro.data import AugmentConfig, CIFARSource, DataPipeline
+from repro.launch.mesh import make_local_mesh
+
+dp, pp, aug_on, batch, accum, steps = (int(a) for a in sys.argv[1:7])
+cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
+mesh = make_local_mesh(model=1, pipe=pp)
+ecfg = EngineConfig(train_batch_size=batch, gradient_accumulation_steps=accum,
+                    total_steps=100, warmup_steps=1, pipeline_stages=pp)
+aug = AugmentConfig(num_classes=cfg.num_classes) if aug_on else None
+eng = DistributedEngine(cfg, ecfg, mesh, aug=aug)
+source = CIFARSource("cifar10", seed=0)
+pipe = DataPipeline(kind="image", global_batch=batch, source=source)
+state = eng.init_state(seed=0)
+step = eng.jit_train_step(donate=False)
+bshard = shd.named(mesh, shd.batch_specs(cfg, pipe.batch_shapes(), mesh))
+with mesh:
+    b = pipe.device_put(pipe.batch_at(0, 0), bshard)
+    step(state, b)[1]["loss"].block_until_ready()   # compile warmup
+    t0 = time.time()
+    e, i = 0, 1
+    for _ in range(steps):
+        b = pipe.device_put(pipe.batch_at(e, i), bshard)
+        out = step(state, b)
+        e, i = pipe.next_cursor(e, i)
+    jax.block_until_ready(out)
+    dt = (time.time() - t0) / steps
+print("DATA_JSON " + json.dumps({
+    "dp": dp, "pp": pp, "aug": bool(aug_on), "step_us": dt * 1e6,
+    "samples_per_sec": batch / dt, "loss": float(out[1]["loss"])}))
+"""
+
+_EVAL_CHILD = r"""
+import json, sys, time
+import jax
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core.engine import DistributedEngine
+from repro.data import CIFARSource
+from repro.launch.mesh import make_local_mesh
+
+batch, eval_size = int(sys.argv[1]), int(sys.argv[2])
+cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
+mesh = make_local_mesh()
+ecfg = EngineConfig(train_batch_size=batch, total_steps=100, warmup_steps=1)
+eng = DistributedEngine(cfg, ecfg, mesh)
+source = CIFARSource("cifar10", seed=0, eval_size=eval_size)
+state = eng.init_state(seed=0)
+eval_fn = eng.jit_eval_step()
+eng.evaluate(state, source.eval_batches(batch), eval_step=eval_fn)  # warmup
+t0 = time.time()
+res = eng.evaluate(state, source.eval_batches(batch), eval_step=eval_fn)
+dt = time.time() - t0
+print("DATA_JSON " + json.dumps({
+    "eval_samples_per_sec": res["eval_count"] / dt,
+    "eval_us": dt * 1e6, "count": res["eval_count"],
+    "batches": source.num_eval_batches(batch),
+    "top1_count": res["eval_top1_count"]}))
+"""
+
+# host-prefetch x on-device augmentation interaction: augmentation adds
+# device work per step, which gives the one-deep background prefetcher
+# MORE room to hide host synthesis + device_put — the rel_step ratios
+# quantify that coupling
+_PREFETCH_CHILD = r"""
+import json, sys, time
+import jax
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core import sharding as shd
+from repro.core.engine import DistributedEngine
+from repro.data import AugmentConfig, CIFARSource, DataPipeline
+from repro.launch.mesh import make_local_mesh
+
+batch, steps = int(sys.argv[1]), int(sys.argv[2])
+cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+mesh = make_local_mesh()
+out = {}
+for aug_name, aug_on in (("augoff", 0), ("augon", 1)):
+    ecfg = EngineConfig(train_batch_size=batch, total_steps=100,
+                        warmup_steps=1)
+    aug = AugmentConfig(num_classes=cfg.num_classes) if aug_on else None
+    eng = DistributedEngine(cfg, ecfg, mesh, aug=aug)
+    source = CIFARSource("cifar10", seed=0)
+    pipe = DataPipeline(kind="image", global_batch=batch, source=source)
+    state = eng.init_state(seed=0)
+    step = eng.jit_train_step(donate=False)
+    bshard = shd.named(mesh, shd.batch_specs(cfg, pipe.batch_shapes(), mesh))
+
+    def run_sync():
+        s, e, i = state, 0, 0
+        for _ in range(steps):
+            b = pipe.device_put(pipe.batch_at(e, i), bshard)
+            s, m = step(s, b)
+            e, i = pipe.next_cursor(e, i)
+        return m
+
+    def run_prefetch():
+        s = state
+        with pipe.prefetch(0, 0, shardings=bshard) as pf:
+            for _ in range(steps):
+                _, b, _ = next(pf)
+                s, m = step(s, b)
+        return m
+
+    with mesh:
+        for pf_name, fn in (("prefoff", run_sync), ("prefon", run_prefetch)):
+            fn()  # warmup (compile + thread spin-up)
+            t0 = time.time()
+            jax.block_until_ready(fn()["loss"])
+            out[f"{pf_name}_{aug_name}"] = (time.time() - t0) / steps * 1e6
+print("DATA_JSON " + json.dumps(out))
+"""
+
+
+def _run_child(code: str, *argv, devices: int = DEVICES) -> dict:
+    from benchmarks.common import child_env
+    r = subprocess.run(
+        [sys.executable, "-c", code] + [str(a) for a in argv],
+        capture_output=True, text=True, timeout=1200,
+        env=child_env(devices))
+    if r.returncode != 0:
+        raise RuntimeError(f"data bench child failed:\n{r.stderr[-2000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("DATA_JSON "):
+            return json.loads(line[len("DATA_JSON "):])
+    raise RuntimeError(f"no DATA_JSON line in child output:\n{r.stdout}")
+
+
+def bench_data_layouts(rows):
+    """samples/sec per dp x pp layout, augmentation on/off, on the
+    procedural-CIFAR ViT smoke workload (the paper's joint
+    throughput-per-layout signal)."""
+    results = [_run_child(_TRAIN_CHILD, dp, pp, aug, BATCH, ACCUM, STEPS)
+               for dp, pp, aug in TRAIN_CASES]
+    base = results[0]["samples_per_sec"]
+    for res in results:
+        aug = "on" if res["aug"] else "off"
+        rows.append(
+            f"data_dp{res['dp']}_pp{res['pp']}_aug{aug},"
+            f"{res['step_us']:.2f},"
+            f"samples_per_sec={res['samples_per_sec']:.2f};"
+            f"rel_tput={res['samples_per_sec'] / base:.3f};"
+            f"loss={res['loss']:.4f}")
+
+
+def bench_eval_loop(rows):
+    """Sharded-eval throughput over the padded procedural test split
+    (dp8, non-divisible final batch exercises the mask path)."""
+    res = _run_child(_EVAL_CHILD, 64, 500)
+    rows.append(
+        f"data_eval_dp8,{res['eval_us']:.2f},"
+        f"eval_samples_per_sec={res['eval_samples_per_sec']:.2f};"
+        f"count={res['count']};batches={res['batches']};"
+        f"top1_count={res['top1_count']}")
+
+
+def bench_prefetch_aug(rows):
+    """Prefetch on/off x augmentation on/off step times (single process,
+    dp8): how much of the host data path the background prefetcher hides
+    once augmentation moves compute on-device."""
+    res = _run_child(_PREFETCH_CHILD, 256, 6)
+    for aug in ("augoff", "augon"):
+        off, on = res[f"prefoff_{aug}"], res[f"prefon_{aug}"]
+        rows.append(f"data_prefoff_{aug},{off:.2f},sync host path")
+        rows.append(f"data_prefon_{aug},{on:.2f},"
+                    f"rel_step={on / off:.3f};one-deep background prefetch")
+
+
+ALL = [bench_data_layouts, bench_eval_loop, bench_prefetch_aug]

@@ -8,8 +8,11 @@ timings and oracle errors live there).
 CI fast path); ``--suite scaling`` runs the dp x pp layout sweep on 8 host
 devices (subprocess per layout) and writes ``BENCH_scaling.json`` — the
 second trajectory artifact: per-layout step time, 1F1B bubble fraction,
-and collective bytes. Default runs the paper + kernel + roofline suites
-(scaling stays opt-in: it re-execs with a different device count).
+and collective bytes. ``--suite data`` runs the real-image workload suite
+(procedural-CIFAR samples/sec per layout, aug on/off, prefetch x aug,
+sharded-eval throughput) and writes ``BENCH_data.json`` — the third
+trajectory artifact. Default runs the paper + kernel + roofline suites
+(scaling/data stay opt-in: they re-exec with a different device count).
 """
 from __future__ import annotations
 
@@ -41,32 +44,40 @@ def _write_rows_json(rows_subset, path: str, schema: str, substrate: str,
 
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("--suite", choices=("all", "kernels", "scaling"),
+    parser.add_argument("--suite",
+                        choices=("all", "kernels", "scaling", "data"),
                         default="all")
     parser.add_argument("--json-out", default="BENCH_kernels.json",
                         help="kernel-row JSON artifact path")
     parser.add_argument("--scaling-json-out", default="BENCH_scaling.json",
                         help="scaling-row JSON artifact path")
+    parser.add_argument("--data-json-out", default="BENCH_data.json",
+                        help="data/eval-row JSON artifact path")
     args = parser.parse_args(argv)
 
-    from benchmarks import attn_bwd_bench, kernel_bench, paper_figures, \
-        roofline_report, scaling_bench
+    from benchmarks import attn_bwd_bench, data_bench, kernel_bench, \
+        paper_figures, roofline_report, scaling_bench
 
     kernel_suites = kernel_bench.ALL + attn_bwd_bench.ALL
     scaling_suites = scaling_bench.ALL
+    data_suites = data_bench.ALL
     if args.suite == "kernels":
         suites = kernel_suites
     elif args.suite == "scaling":
         suites = scaling_suites
+    elif args.suite == "data":
+        suites = data_suites
     else:
         suites = (paper_figures.ALL + kernel_suites + roofline_report.ALL)
     kernel_set = set(kernel_suites)
     scaling_set = set(scaling_suites)
+    data_set = set(data_suites)
 
     header = "name,us_per_call,derived"
     rows = [header]
     kernel_rows = []
     scaling_rows = []
+    data_rows = []
     t0 = time.time()
     failures = 0
     for fn in suites:
@@ -81,8 +92,10 @@ def main(argv=None) -> None:
             kernel_rows.extend(rows[start:])
         if fn in scaling_set:
             scaling_rows.extend(rows[start:])
+        if fn in data_set:
+            data_rows.extend(rows[start:])
     artifacts = []
-    if args.suite != "scaling":
+    if args.suite not in ("scaling", "data"):
         _write_rows_json(
             kernel_rows, args.json_out, "repro/kernel-bench/v1",
             "pallas-interpret-cpu",
@@ -98,6 +111,15 @@ def main(argv=None) -> None:
             "collective bytes (trip-count-aware HLO) are the layout-"
             "comparison signal")
         artifacts.append(os.path.abspath(args.scaling_json_out))
+    if data_rows:
+        _write_rows_json(
+            data_rows, args.data_json_out, "repro/data-bench/v1",
+            "cpu-host-devices",
+            "real-image workload (procedural CIFAR, vit-b16 smoke): "
+            "samples/sec per dp x pp layout and aug on/off, prefetch x "
+            "aug interaction, sharded-eval throughput; CPU-relative — "
+            "the layout/aug/prefetch ratios are the signal")
+        artifacts.append(os.path.abspath(args.data_json_out))
     print("\n".join(rows))
     print(f"# {len(rows)-1} rows in {time.time()-t0:.1f}s, "
           f"{failures} failures; artifacts: {', '.join(artifacts)}",

@@ -1,20 +1,29 @@
 """End-to-end driver (deliverable b): the paper's actual workload — ViT-B/16
-(86M params, the "~100M model") trained with data parallelism for a few
-hundred steps, with elastic checkpointing and a metrics log.
+(86M params, the "~100M model") trained on CIFAR-10/100 with data
+parallelism, on-device augmentation, periodic held-out evaluation, elastic
+checkpointing, and a metrics log.
 
-Full-size invocation (what a TPU/GPU host would run):
+Full-size invocation (what a TPU/GPU host would run, with the real data):
     PYTHONPATH=src python examples/train_vit_cifar.py --full --steps 300 \
-        --devices 8 --batch 64 --accum 2
+        --devices 8 --batch 64 --accum 2 --data-dir /data/cifar \
+        --augment --eval-every 50
 
-Default (CPU-friendly) runs the reduced ViT at the same code path:
+Default (CPU-friendly) runs the reduced ViT at the same code path on the
+deterministic procedural CIFAR stream — no downloads:
     PYTHONPATH=src python examples/train_vit_cifar.py
+
+``--data-dir`` should hold the standard pickle distribution
+(``cifar-10-batches-py/`` or ``cifar-100-python/``); when absent the
+procedural generator stands in, batch-for-batch addressable by the same
+``(seed, epoch, index)`` cursor.
 
 Preemption / resume: checkpoints are the full TrainState (params, optimizer
 moments, step, data cursor, rng) saved shard-locally every --ckpt-every
 steps by the async saver. Kill the run at any point and re-invoke with
---resume to continue the exact loss trajectory — in the SAME layout or a
-different one (the restore reshards; e.g. interrupt a --devices 8 DDP run
-and resume it under --devices 4 --zero 3):
+--resume to continue the exact loss trajectory — including the
+augmentation stream (keyed on fold_in(state.rng, step)) and the eval
+metrics — in the SAME layout or a different one (the restore reshards;
+e.g. interrupt a --devices 8 DDP run and resume under --devices 4 --zero 3):
 
     PYTHONPATH=src python examples/train_vit_cifar.py --steps 120
     # ... preempted at step 60 ...
@@ -35,7 +44,14 @@ def main():
     ap.add_argument("--accum", type=int, default=2)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--dataset", default="cifar10",
-                    choices=["cifar10", "cifar100", "imagenet100"])
+                    choices=["cifar10", "cifar100"])
+    ap.add_argument("--data-dir", default="",
+                    help="real CIFAR binary batches (pickle distribution); "
+                         "unset -> deterministic procedural CIFAR")
+    ap.add_argument("--augment", action="store_true",
+                    help="on-device RandomCrop+Flip+Mixup/CutMix")
+    ap.add_argument("--eval-every", type=int, default=40,
+                    help="held-out eval cadence in steps (0 = end only)")
     ap.add_argument("--zero", type=int, default=0)
     ap.add_argument("--ckpt-every", type=int, default=20,
                     help="async TrainState save cadence (steps)")
@@ -49,6 +65,8 @@ def main():
            "--steps", str(args.steps), "--batch", str(args.batch),
            "--accum", str(args.accum), "--zero", str(args.zero),
            "--dataset", args.dataset,
+           "--eval-every", str(args.eval_every),
+           "--label-smoothing", "0.1",
            "--ckpt-dir", "/tmp/repro_vit_ckpt",
            "--ckpt-every", str(args.ckpt_every),
            "--metrics-out", "/tmp/repro_vit_metrics.json",
@@ -57,6 +75,10 @@ def main():
         cmd.append("--smoke")
     if args.devices:
         cmd += ["--devices", str(args.devices)]
+    if args.data_dir:
+        cmd += ["--data-dir", args.data_dir]
+    if args.augment:
+        cmd.append("--augment")
     if args.resume:
         cmd.append("--resume")
     print("->", " ".join(cmd))

@@ -98,6 +98,8 @@ class ModelConfig:
     image_size: int = 0
     patch_size: int = 0
     num_classes: int = 0
+    label_smoothing: float = 0.0    # classification CE smoothing (train
+    #                                 only; eval NLL stays un-smoothed)
 
     # --- numerics -------------------------------------------------------
     dtype: str = "bfloat16"

@@ -93,10 +93,28 @@ class TrainState:
 
 
 class DistributedEngine:
-    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, mesh):
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, mesh,
+                 aug=None):
+        """``aug``: optional :class:`repro.data.augment.AugmentConfig` —
+        on-device train-time augmentation applied per microbatch inside
+        the jitted step, keyed by the TrainState rng convention
+        (``fold_in(state.rng, state.step)`` split per microbatch), so a
+        resumed run replays the interrupted run's augmentation stream."""
         self.cfg = cfg
         self.ecfg = ecfg
         self.mesh = mesh
+        self.aug = aug.validate() if aug is not None else None
+        if self.aug is not None and ecfg.pipeline_stages > 1:
+            # pipelined_loss is deterministic-only (no per-microbatch rng
+            # stream through the AD-through-scan 1F1B schedule)
+            raise ValueError(
+                "on-device augmentation needs per-microbatch rngs, which "
+                "the 1F1B pipeline path does not thread; run augmented "
+                "training with pipeline_stages=1")
+        if self.aug is not None and cfg.arch_type != "vit":
+            raise ValueError(
+                f"image augmentation only applies to vit archs, not "
+                f"{cfg.arch_type!r}")
         self.dp_world = 1
         for a in ("pod", "data"):
             if a in mesh.axis_names:
@@ -228,16 +246,10 @@ class DistributedEngine:
 
     def _train_step(self, state: TrainState, batch):
         params, opt_state = state.params, state.opt_state
-        if self.ecfg.cast_params_bf16:
-            # ZeRO-3 §Perf optimization: convert the f32 master shards
-            # to bf16 BEFORE GSPMD's per-layer all-gather — halves
-            # all-gather bytes; master copy/optimizer stay f32.
-            compute_params = jax.tree.map(
-                lambda p: p.astype(jnp.bfloat16)
-                if p.dtype == jnp.float32 and p.ndim >= 2 else p,
-                params)
-        else:
-            compute_params = params
+        # ZeRO-3 §Perf optimization (cast_params_bf16): convert the f32
+        # master shards to bf16 BEFORE GSPMD's per-layer all-gather —
+        # halves all-gather bytes; master copy/optimizer stay f32.
+        compute_params = self._compute_params(params)
         # ZeRO>=2: dp-sharded grad accumulator => per-microstep
         # reduce-scatter instead of a replicated all-reduce
         gspecs = self._pspecs(self.init_abstract()[0],
@@ -264,7 +276,11 @@ class DistributedEngine:
                     self.ecfg.gradient_accumulation_steps)
 
                 def mb_loss(p, mb, rng):
-                    del rng  # hook for dropout-style regularizers
+                    if self.aug is not None:
+                        # on-device crop/flip/Mixup/CutMix — pure in the
+                        # microbatch rng, so the stream is resumable
+                        from repro.data.augment import augment_batch
+                        mb = augment_batch(rng, mb, self.aug)
                     return model.loss_fn(self.cfg, p, mb)
                 grads, metrics = accumulate_gradients(
                     mb_loss, compute_params, batch,
@@ -319,6 +335,82 @@ class DistributedEngine:
         fn = self.jit_train_step(batch_shapes, donate=False)
         with self.mesh:
             return fn.lower(self.abstract_state(), batch_shapes)
+
+    # ------------------------------------------------------------------
+    # evaluation (sharded, padding-mask-aware, layout-invariant)
+    # ------------------------------------------------------------------
+
+    def _compute_params(self, params):
+        """The train step's compute-dtype view of the params (bf16 gather
+        under cast_params_bf16) — eval uses the same view so eval numerics
+        match what training actually computes with."""
+        if not self.ecfg.cast_params_bf16:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+
+    def _eval_step(self, state: TrainState, batch):
+        """No-grad ``(state, batch) -> metrics``: forward + integer
+        top-1/top-5 correct counts and an fp32 NLL sum.
+
+        The counts ARE the cross-``data``/``pipe`` reduction: the batch is
+        dp-sharded, so the in-jit integer sums lower to all-reduces over
+        the dp axes (exact — integer addition is associative), and the
+        pipe/model axes compute replicas of the same value. ``mask`` in
+        the batch zeroes the padded tail of a non-divisible final eval
+        batch. Works under every layout the engine owns, including pp>1:
+        the plain scan-over-L forward just gathers pipe-sharded layer
+        params (eval needs no 1F1B schedule)."""
+        params = self._compute_params(state.params)
+        with shardctx.use(self.hints):
+            logits, _, _ = model.forward(self.cfg, params, batch,
+                                         mode="train")
+        return model.classification_counts(logits, batch["labels"],
+                                           batch.get("mask"))
+
+    def jit_eval_step(self, batch_shapes=None):
+        """jit'd eval step; state is NOT donated (the caller keeps
+        training with it)."""
+        sshard = self.state_shardings()
+        in_shardings = (sshard,
+                        shd.named(self.mesh, shd.batch_specs(
+                            self.cfg, batch_shapes, self.mesh))
+                        if batch_shapes is not None else None)
+        return jax.jit(self._eval_step, in_shardings=in_shardings,
+                       out_shardings=None)
+
+    def evaluate(self, state: TrainState, batches, *, eval_step=None):
+        """Sharded eval loop over an iterator of (padded) eval batches —
+        e.g. ``CIFARSource.eval_batches(b)``. Accumulates the per-batch
+        integer counts host-side and returns both the exact counts (the
+        layout-invariance assertion surface) and the derived rates."""
+        if eval_step is None:
+            eval_step = self.jit_eval_step()
+        top1 = top5 = count = 0
+        loss_sum = 0.0
+        bshard = None
+        with self.mesh:
+            for batch in batches:
+                if bshard is None:
+                    shapes = jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        batch)
+                    bshard = shd.named(self.mesh, shd.batch_specs(
+                        self.cfg, shapes, self.mesh))
+                batch = jax.tree.map(jax.device_put, batch, bshard)
+                m = eval_step(state, batch)
+                top1 += int(jax.device_get(m["top1"]))
+                top5 += int(jax.device_get(m["top5"]))
+                count += int(jax.device_get(m["count"]))
+                loss_sum += float(jax.device_get(m["loss_sum"]))
+        n = max(count, 1)
+        return {
+            "eval_top1_count": top1, "eval_top5_count": top5,
+            "eval_count": count,
+            "eval_acc": top1 / n, "eval_top5_acc": top5 / n,
+            "eval_loss": loss_sum / n,
+        }
 
     # ------------------------------------------------------------------
     # serving (prefill / decode)

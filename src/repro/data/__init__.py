@@ -5,3 +5,5 @@ from repro.data.synthetic import (  # noqa: F401
     make_token_batch,
 )
 from repro.data.pipeline import DataPipeline, Prefetcher  # noqa: F401
+from repro.data.datasets import CIFARSource, make_source  # noqa: F401
+from repro.data.augment import AugmentConfig, augment_batch  # noqa: F401

@@ -1,0 +1,153 @@
+"""On-device, jit-able image augmentation: random crop + horizontal flip +
+Mixup/CutMix with soft labels.
+
+The standard ViT-on-CIFAR regularization recipe (pytorch-image-models /
+"Scaling Vision Transformers" conventions), implemented as a pure function
+of a PRNG key so it runs *inside* the jitted train step:
+
+    batch = augment_batch(rng, batch, acfg)
+
+The engine threads the key from the TrainState convention —
+``fold_in(state.rng, state.step)`` split per microbatch — so the
+augmentation stream is a pure function of ``(base rng, step, microbatch)``
+and a resumed run replays the exact stream of the run it interrupted (the
+resume-parity contract extends to augmented training).
+
+Everything is branchless (``jnp.where`` over both candidates, no
+``lax.cond``) so one compiled step serves every draw. Mixup/CutMix emit
+**soft labels** ``(B, num_classes)``: each row is the convex combination
+``lam * onehot(y) + (1-lam) * onehot(y[perm])`` (rows sum to 1 and lie in
+the convex hull of the pair — property-tested). With both alphas 0 the
+labels pass through hard, and crop/flip never touch labels at all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AugmentConfig:
+    """Static (hashable) augmentation recipe — jit-safe as a closure
+    constant; one compiled step per recipe."""
+    num_classes: int
+    crop_pad: int = 4           # zero-pad each side, then random crop back
+    flip: bool = True           # horizontal flip with p=0.5
+    mixup_alpha: float = 0.2    # Beta(a, a) mixing weight; 0 disables
+    cutmix_alpha: float = 1.0   # Beta(a, a) box area; 0 disables
+    mix_prob: float = 0.5       # probability a batch is mixed at all
+    switch_prob: float = 0.5    # P(cutmix | mixing) when both enabled
+
+    @property
+    def mixing(self) -> bool:
+        return self.mixup_alpha > 0.0 or self.cutmix_alpha > 0.0
+
+    def validate(self):
+        if self.num_classes <= 0:
+            raise ValueError(
+                f"AugmentConfig.num_classes must be positive: "
+                f"{self.num_classes} (soft labels need the class count)")
+        if self.crop_pad < 0:
+            raise ValueError(f"crop_pad must be >= 0: {self.crop_pad}")
+        return self
+
+
+def random_crop(rng, images, pad: int):
+    """Pad-and-crop with a per-sample offset (the CIFAR-standard
+    RandomCrop(32, padding=4)); label-invariant by construction."""
+    if pad == 0:
+        return images
+    b, h, w, c = images.shape
+    padded = jnp.pad(images, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    off = jax.random.randint(rng, (b, 2), 0, 2 * pad + 1)
+
+    def crop_one(img, o):
+        return jax.lax.dynamic_slice(img, (o[0], o[1], 0), (h, w, c))
+
+    return jax.vmap(crop_one)(padded, off)
+
+
+def random_flip(rng, images):
+    """Per-sample horizontal flip with p=0.5."""
+    flip = jax.random.bernoulli(rng, 0.5, (images.shape[0],))
+    return jnp.where(flip[:, None, None, None], images[:, :, ::-1], images)
+
+
+def _cutmix_mask(rng, h: int, w: int, lam):
+    """Random box covering fraction ``1 - lam`` of the image; returns
+    (mask (h, w) with 1 inside the box, realized box fraction)."""
+    kx, ky = jax.random.split(rng)
+    cut = jnp.sqrt(1.0 - lam)
+    bh = jnp.round(cut * h).astype(jnp.int32)
+    bw = jnp.round(cut * w).astype(jnp.int32)
+    cy = jax.random.randint(ky, (), 0, h)
+    cx = jax.random.randint(kx, (), 0, w)
+    y0 = jnp.clip(cy - bh // 2, 0, h)
+    y1 = jnp.clip(cy + (bh + 1) // 2, 0, h)
+    x0 = jnp.clip(cx - bw // 2, 0, w)
+    x1 = jnp.clip(cx + (bw + 1) // 2, 0, w)
+    rows = jnp.arange(h)[:, None]
+    cols = jnp.arange(w)[None, :]
+    mask = ((rows >= y0) & (rows < y1) & (cols >= x0) & (cols < x1))
+    frac = (y1 - y0) * (x1 - x0) / (h * w)
+    return mask.astype(jnp.float32), frac.astype(jnp.float32)
+
+
+def mix_batch(rng, images, onehot, acfg: AugmentConfig):
+    """Batch-level Mixup OR CutMix (timm convention: one draw per batch).
+
+    Returns (mixed images, soft labels). The soft labels use the
+    *realized* mixing fraction (CutMix clamps the box at image borders, so
+    the pixel fraction — not the sampled lam — is what the labels see)."""
+    k_lam_mix, k_lam_cut, k_apply, k_switch, k_perm, k_box = \
+        jax.random.split(rng, 6)
+    b, h, w, _ = images.shape
+    perm = jax.random.permutation(k_perm, b)
+    im2, oh2 = images[perm], onehot[perm]
+
+    use_cutmix = jnp.logical_and(
+        jax.random.bernoulli(k_switch, acfg.switch_prob),
+        acfg.cutmix_alpha > 0.0) if acfg.mixup_alpha > 0.0 \
+        else jnp.asarray(acfg.cutmix_alpha > 0.0)
+
+    lam_mix = jax.random.beta(
+        k_lam_mix, acfg.mixup_alpha or 1.0, acfg.mixup_alpha or 1.0)
+    box, box_frac = _cutmix_mask(
+        k_box, h, w, jax.random.beta(
+            k_lam_cut, acfg.cutmix_alpha or 1.0, acfg.cutmix_alpha or 1.0))
+
+    mixed_up = lam_mix * images + (1.0 - lam_mix) * im2
+    cut = images * (1.0 - box)[None, :, :, None] + \
+        im2 * box[None, :, :, None]
+    lam = jnp.where(use_cutmix, 1.0 - box_frac, lam_mix)
+    out_images = jnp.where(use_cutmix, cut, mixed_up)
+    out_labels = lam * onehot + (1.0 - lam) * oh2
+
+    apply = jax.random.bernoulli(k_apply, acfg.mix_prob)
+    return (jnp.where(apply, out_images, images),
+            jnp.where(apply, out_labels, onehot))
+
+
+def augment_batch(rng, batch: dict, acfg: AugmentConfig) -> dict:
+    """Full train-time augmentation of one (micro)batch.
+
+    In: ``{"images": (B,H,W,3), "labels": (B,) int}``. Out: same images
+    shape; labels become soft ``(B, num_classes)`` float32 when mixing is
+    enabled, and stay hard ints otherwise (geometric augs are
+    label-invariant). Pure in ``rng`` — the determinism contract."""
+    k_crop, k_flip, k_mix = jax.random.split(rng, 3)
+    images = batch["images"]
+    images = random_crop(k_crop, images, acfg.crop_pad)
+    if acfg.flip:
+        images = random_flip(k_flip, images)
+    out = dict(batch)
+    out["images"] = images
+    if acfg.mixing:
+        onehot = jax.nn.one_hot(batch["labels"], acfg.num_classes,
+                                dtype=jnp.float32)
+        images, soft = mix_batch(k_mix, images, onehot, acfg)
+        out["images"] = images
+        out["labels"] = soft
+    return out

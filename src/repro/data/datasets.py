@@ -1,0 +1,250 @@
+"""Real-image datasets: CIFAR-10/100 sources with train/test splits.
+
+The paper's experiments are real CIFAR-10/100 training runs; this module
+puts them behind the same **cursor-addressable** contract the synthetic
+pipeline established (``batch_at(epoch, index)`` pure in
+``(seed, epoch, index)``), so the TrainState data cursor and the elastic
+resume path work unchanged on the real workload.
+
+Two backing stores, one interface:
+
+- **Disk** (``data_dir`` given and the binary batches exist): the standard
+  python-pickle distributions — ``cifar-10-batches-py/data_batch_{1..5}`` +
+  ``test_batch``, or ``cifar-100-python/{train,test}`` — loaded once into
+  host memory, per-channel normalized with the canonical mean/std.
+- **Procedural** (no ``data_dir``; the CI/test path — never downloads):
+  a deterministic CIFAR-*like* generator. Train batches are pure in the
+  batch seed (class template + structured noise, same construction as
+  ``data/synthetic.py`` so accuracy trends are learnable); the eval split
+  is a FIXED finite array generated from the source seed alone, so every
+  process/layout sees byte-identical eval data.
+
+Evaluation iterates the test split in order; the final non-divisible batch
+is zero-padded to the full batch shape with a ``mask`` leaf (1 = real
+example) so the jitted eval step sees one static shape and the padding
+contributes nothing to the metric counts.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.data.synthetic import DATASETS, DatasetSpec, \
+    class_conditional_images
+
+# canonical per-channel statistics (pytorch-image-models conventions)
+CIFAR10_MEAN = (0.4914, 0.4822, 0.4465)
+CIFAR10_STD = (0.2470, 0.2435, 0.2616)
+CIFAR100_MEAN = (0.5071, 0.4865, 0.4409)
+CIFAR100_STD = (0.2673, 0.2564, 0.2762)
+
+_STATS = {"cifar10": (CIFAR10_MEAN, CIFAR10_STD),
+          "cifar100": (CIFAR100_MEAN, CIFAR100_STD)}
+
+# procedural split sizes: big enough for meaningful accuracy, small enough
+# that CI materializes the eval split in milliseconds
+PROCEDURAL_TRAIN_SIZE = 4096
+PROCEDURAL_EVAL_SIZE = 500
+
+
+def _pickle_load(path: str) -> dict:
+    with open(path, "rb") as f:
+        d = pickle.load(f, encoding="bytes")
+    return {k.decode() if isinstance(k, bytes) else k: v
+            for k, v in d.items()}
+
+
+def _find_cifar_files(name: str, data_dir: str):
+    """Locate the pickle batches under ``data_dir`` (or the standard
+    subdirectory the archives unpack into). Returns (train_files,
+    test_file, label_key) or None when absent."""
+    sub = "cifar-10-batches-py" if name == "cifar10" else "cifar-100-python"
+    for root in (os.path.join(data_dir, sub), data_dir):
+        if name == "cifar10":
+            train = [os.path.join(root, f"data_batch_{i}")
+                     for i in range(1, 6)]
+            test = os.path.join(root, "test_batch")
+            key = "labels"
+        else:
+            train = [os.path.join(root, "train")]
+            test = os.path.join(root, "test")
+            key = "fine_labels"
+        if all(os.path.isfile(p) for p in train) and os.path.isfile(test):
+            return train, test, key
+    return None
+
+
+def _load_split(files, label_key: str):
+    imgs, labels = [], []
+    for path in files:
+        d = _pickle_load(path)
+        data = np.asarray(d["data"], np.uint8)
+        # (N, 3072) row-major CHW -> (N, 32, 32, 3) HWC
+        imgs.append(data.reshape(-1, 3, 32, 32).transpose(0, 2, 3, 1))
+        labels.append(np.asarray(d[label_key], np.int64))
+    return np.concatenate(imgs), np.concatenate(labels)
+
+
+def normalize_images(u8, mean, std):
+    """uint8 HWC -> float32 normalized with per-channel statistics."""
+    x = np.asarray(u8, np.float32) / 255.0
+    return (x - np.asarray(mean, np.float32)) \
+        / np.asarray(std, np.float32)
+
+
+def _upsample(images: np.ndarray, res: int) -> np.ndarray:
+    """Nearest-neighbor upsample 32px CIFAR to the model resolution (the
+    full ViT-B/16 trains at 224 = 7 x 32)."""
+    native = images.shape[1]
+    if res == native:
+        return images
+    if res % native:
+        raise ValueError(
+            f"target resolution {res} not an integer multiple of the "
+            f"native {native}px CIFAR grid")
+    k = res // native
+    return np.repeat(np.repeat(images, k, axis=1), k, axis=2)
+
+
+class CIFARSource:
+    """CIFAR-10/100 train/test source behind the cursor contract.
+
+    ``train_batch(batch, seed=...)`` is pure in ``seed`` — the pipeline
+    derives that seed from ``(source seed, epoch, index)`` via
+    ``batch_seed``, which is the whole addressability story. ``eval_*``
+    expose the fixed test split for the sharded eval loop.
+    """
+
+    def __init__(self, name: str = "cifar10", *,
+                 data_dir: Optional[str] = None, seed: int = 0,
+                 resolution: Optional[int] = None,
+                 train_size: Optional[int] = None,
+                 eval_size: Optional[int] = None):
+        if name not in _STATS:
+            raise ValueError(f"unknown CIFAR dataset {name!r}; "
+                             f"expected one of {sorted(_STATS)}")
+        self.spec: DatasetSpec = DATASETS[name]
+        self.name = name
+        self.seed = seed
+        self.resolution = resolution or self.spec.resolution
+        self.mean, self.std = _STATS[name]
+
+        found = _find_cifar_files(name, data_dir) if data_dir else None
+        if data_dir and found is None:
+            # an EXPLICIT data_dir that doesn't hold the batches is a
+            # user error, not a fallback: silently training on procedural
+            # data while reporting plausible metrics would be the worst
+            # possible failure mode for a paper-reproduction run
+            sub = "cifar-10-batches-py" if name == "cifar10" \
+                else "cifar-100-python"
+            raise FileNotFoundError(
+                f"--data-dir {data_dir!r} does not contain the {name} "
+                f"pickle batches (expected {sub}/ there or the batch "
+                f"files directly); unset it to use the procedural "
+                f"generator")
+        self.procedural = found is None
+        if found is not None:
+            train_files, test_file, key = found
+            ti, tl = _load_split(train_files, key)
+            ei, el = _load_split([test_file], key)
+            self._train_images = normalize_images(ti, self.mean, self.std)
+            self._train_labels = tl.astype(np.int32)
+            self._eval_images = normalize_images(ei, self.mean, self.std)
+            self._eval_labels = el.astype(np.int32)
+            if train_size:
+                self._train_images = self._train_images[:train_size]
+                self._train_labels = self._train_labels[:train_size]
+            if eval_size:
+                self._eval_images = self._eval_images[:eval_size]
+                self._eval_labels = self._eval_labels[:eval_size]
+        else:
+            self._train_images = self._train_labels = None
+            n_eval = eval_size or PROCEDURAL_EVAL_SIZE
+            self._train_size = train_size or PROCEDURAL_TRAIN_SIZE
+            # fixed eval split: pure in (name, seed) — every process and
+            # every layout sees byte-identical eval data
+            self._eval_images, self._eval_labels = self._procedural_examples(
+                np.random.default_rng((self.seed, 0xE7A1)), n_eval)
+
+    # ------------------------------------------------------------------
+    # procedural generator (CI path — no downloads)
+    # ------------------------------------------------------------------
+
+    def _procedural_examples(self, rng: np.random.Generator, n: int):
+        """Class-conditional images at the *native* 32px grid, already
+        normalized-scale (templates + noise have ~unit variance) — the
+        shared synthetic generator, so the procedural splits stay
+        learnable the same way the legacy stream is."""
+        return class_conditional_images(self.spec, n, rng, resolution=32)
+
+    # ------------------------------------------------------------------
+    # train split (cursor-addressable via the pipeline's batch seed)
+    # ------------------------------------------------------------------
+
+    @property
+    def train_size(self) -> int:
+        if self.procedural:
+            return self._train_size
+        return len(self._train_labels)
+
+    def train_batch(self, batch: int, *, seed: int) -> dict:
+        """One un-augmented train batch, pure in ``seed``. Disk mode draws
+        a with-replacement sample of the split (the DataLoader-with-
+        shuffle equivalent, but addressable); procedural mode synthesizes
+        the batch from the seed directly."""
+        rng = np.random.default_rng(seed)
+        if self.procedural:
+            images, labels = self._procedural_examples(rng, batch)
+        else:
+            idx = rng.integers(0, len(self._train_labels), (batch,))
+            images, labels = self._train_images[idx], self._train_labels[idx]
+        return {"images": _upsample(images, self.resolution),
+                "labels": labels}
+
+    # ------------------------------------------------------------------
+    # eval split (fixed, finite, padded to a static batch shape)
+    # ------------------------------------------------------------------
+
+    @property
+    def eval_size(self) -> int:
+        return len(self._eval_labels)
+
+    def eval_batches(self, batch: int) -> Iterator[dict]:
+        """Iterate the test split in order. Every yielded batch has the
+        full static shape; the final non-divisible batch is zero-padded
+        with ``mask`` zeros (the eval step multiplies every per-example
+        indicator by the mask, so padding is metric-invisible).
+        Upsampling happens per batch: at 224px the full upsampled CIFAR
+        test split would be ~6 GB of host fp32 per eval invocation."""
+        labels = self._eval_labels
+        n = len(labels)
+        for lo in range(0, n, batch):
+            hi = min(lo + batch, n)
+            m = hi - lo
+            img = _upsample(self._eval_images[lo:hi], self.resolution)
+            lab = labels[lo:hi]
+            mask = np.ones((batch,), np.float32)
+            if m < batch:
+                pad = batch - m
+                img = np.concatenate(
+                    [img, np.zeros((pad,) + img.shape[1:], img.dtype)])
+                lab = np.concatenate([lab, np.zeros((pad,), lab.dtype)])
+                mask[m:] = 0.0
+            yield {"images": img, "labels": lab, "mask": mask}
+
+    def num_eval_batches(self, batch: int) -> int:
+        return -(-self.eval_size // batch)
+
+
+def make_source(dataset: str, *, data_dir: Optional[str] = None,
+                seed: int = 0, resolution: Optional[int] = None,
+                eval_size: Optional[int] = None) -> Optional[CIFARSource]:
+    """``None`` for the synthetic tensor workload, a CIFARSource otherwise
+    (the one switch ``launch/train.py`` flips on ``--dataset``)."""
+    if dataset == "synthetic":
+        return None
+    return CIFARSource(dataset, data_dir=data_dir, seed=seed,
+                       resolution=resolution, eval_size=eval_size)

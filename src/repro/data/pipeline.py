@@ -18,6 +18,7 @@ import math
 import queue
 import struct
 import threading
+import weakref
 import zlib
 from typing import Iterator, Optional, Tuple
 
@@ -39,18 +40,29 @@ class DataPipeline:
     def __init__(self, *, kind: str, global_batch: int, seed: int = 0,
                  dataset: Optional[DatasetSpec] = None, vocab: int = 0,
                  seq_len: int = 0, resolution: Optional[int] = None,
-                 weak_scaling_frac: float = 1.0, epoch_size: int = 0):
+                 weak_scaling_frac: float = 1.0, epoch_size: int = 0,
+                 source=None):
         """kind: 'image' | 'token'. weak_scaling_frac: fraction of the
-        dataset used (paper: n_gpus x 10%)."""
+        dataset used (paper: n_gpus x 10%). ``source``: a
+        :class:`repro.data.datasets.CIFARSource` (real or procedural
+        CIFAR) — image batches then come from its train split behind the
+        same ``batch_at`` cursor contract; without it, images are
+        spec-shaped synthetic tensors."""
         assert kind in ("image", "token")
+        if source is not None and kind != "image":
+            raise ValueError("dataset sources only back the image kind")
         self.kind = kind
         self.global_batch = global_batch
         self.seed = seed
-        self.dataset = dataset
+        self.dataset = source.spec if source is not None else dataset
+        self.source = source
         self.vocab = vocab
         self.seq_len = seq_len
-        self.resolution = resolution
-        n = epoch_size or (dataset.num_images if dataset else 50_000)
+        self.resolution = source.resolution if source is not None \
+            else resolution
+        n = epoch_size or (source.train_size if source is not None
+                           else self.dataset.num_images
+                           if self.dataset else 50_000)
         self.epoch_size = int(n * weak_scaling_frac)
 
     @property
@@ -67,6 +79,8 @@ class DataPipeline:
                 f"{self.steps_per_epoch} steps")
         seed = batch_seed(self.seed, epoch, index)
         if self.kind == "image":
+            if self.source is not None:
+                return self.source.train_batch(self.global_batch, seed=seed)
             return make_image_batch(self.dataset, self.global_batch,
                                     seed=seed, resolution=self.resolution)
         return make_token_batch(self.vocab, self.global_batch,
@@ -131,6 +145,17 @@ class Prefetcher:
     Iterate forever (epochs roll automatically); ``close()`` (or the
     context manager) stops the thread. Synthesis errors re-raise on the
     consumer side.
+
+    Lifecycle guarantees (regression-tested in test_data_pipeline.py):
+    every queue interaction on the producer side is **stop-aware** — in
+    particular the error hand-off, which previously used a blocking
+    ``put`` and stranded the thread forever when the producer raised
+    while the queue was full and the consumer had stopped consuming.
+    ``close()`` is idempotent and always joins the thread; ``__next__``
+    after ``close()`` raises ``StopIteration`` instead of blocking on the
+    drained queue; dropping the last reference without ``close()`` still
+    reclaims the thread via ``__del__`` (belt-and-braces — the context
+    manager is the intended API).
     """
 
     def __init__(self, pipe: DataPipeline, epoch: int = 0, index: int = 0,
@@ -141,46 +166,61 @@ class Prefetcher:
         self._shardings = shardings
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        # the thread target must NOT hold a strong ref to self: the
+        # consumer dropping its last reference is what lets __del__ stop
+        # the producer (target=self._run would keep the Prefetcher alive
+        # from the thread's own frame, making the leak unreclaimable)
         self._thread = threading.Thread(
-            target=self._run, args=(int(epoch), int(index)),
+            target=_prefetch_loop,
+            args=(weakref.ref(self), pipe, self._q, self._stop, shardings,
+                  int(epoch), int(index)),
             name="data-prefetch", daemon=True)
         self._thread.start()
-
-    def _run(self, epoch: int, index: int):
-        try:
-            while not self._stop.is_set():
-                batch = self._pipe.batch_at(epoch, index)
-                batch = self._pipe.device_put(batch, self._shardings)
-                item = ((epoch, index), batch,
-                        self._pipe.next_cursor(epoch, index))
-                while not self._stop.is_set():
-                    try:
-                        self._q.put(("ok", item), timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-                epoch, index = item[2]
-        except BaseException as e:  # noqa: BLE001 — re-raised by consumer
-            self._q.put(("error", e))
 
     def __iter__(self):
         return self
 
     def __next__(self):
-        kind, item = self._q.get()
+        while True:
+            try:
+                kind, item = self._q.get(timeout=0.1)
+                break
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration("prefetcher closed")
+                if not self._thread.is_alive():
+                    # producer exited: already-delivered error consumed, or
+                    # thread died before enqueueing — surface it either way
+                    if self._error is not None:
+                        raise RuntimeError(
+                            "data prefetch thread failed") from self._error
+                    raise StopIteration("prefetch thread exited")
         if kind == "error":
             raise RuntimeError("data prefetch thread failed") from item
         return item
 
-    def close(self):
-        self._stop.set()
-        # unblock a producer stuck in put() by draining
+    def _drain(self):
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+
+    def close(self):
+        """Idempotent: stop the producer, unblock any pending put by
+        draining, and join the thread."""
+        self._stop.set()
+        self._drain()
         self._thread.join(timeout=5)
+        self._drain()       # anything put between drain and thread exit
+
+    def __del__(self):
+        try:
+            if not self._stop.is_set():
+                self.close()
+        except Exception:   # noqa: BLE001 — interpreter-shutdown tolerant
+            pass
 
     def __enter__(self):
         return self
@@ -188,3 +228,36 @@ class Prefetcher:
     def __exit__(self, *exc):
         self.close()
         return False
+
+
+def _stop_aware_put(q: queue.Queue, stop: threading.Event, msg) -> bool:
+    """Put that gives up (drops the message) once the consumer has
+    closed, instead of blocking forever on a full queue."""
+    while not stop.is_set():
+        try:
+            q.put(msg, timeout=0.1)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+def _prefetch_loop(ref, pipe: DataPipeline, q: queue.Queue,
+                   stop: threading.Event, shardings, epoch: int,
+                   index: int):
+    """Producer body (module-level — see Prefetcher.__init__ on why it
+    only weakly references its owner)."""
+    try:
+        while not stop.is_set():
+            batch = pipe.batch_at(epoch, index)
+            batch = pipe.device_put(batch, shardings)
+            item = ((epoch, index), batch, pipe.next_cursor(epoch, index))
+            if not _stop_aware_put(q, stop, ("ok", item)):
+                return
+            epoch, index = item[2]
+    except BaseException as e:  # noqa: BLE001 — re-raised by consumer
+        owner = ref()
+        if owner is not None:
+            owner._error = e
+            del owner       # drop the strong ref before parking in put
+        _stop_aware_put(q, stop, ("error", e))

@@ -31,23 +31,33 @@ DATASETS = {
 }
 
 
-def make_image_batch(spec: DatasetSpec, batch: int, *, seed: int,
-                     resolution: int | None = None):
-    """Class-conditional synthetic images: per-class fixed template + noise.
-    Learnable by a linear probe, so train-accuracy trends are meaningful."""
+def class_conditional_images(spec: DatasetSpec, n: int,
+                             rng: np.random.Generator,
+                             resolution: int | None = None):
+    """Class-conditional synthetic images: per-class fixed template +
+    noise, learnable by a linear probe. Draw order (labels, then noise)
+    is a compatibility contract — `make_image_batch` streams and the
+    procedural CIFAR splits (data/datasets.py) both derive from it."""
     res = resolution or spec.resolution
-    rng = np.random.default_rng(seed)
-    labels = rng.integers(0, spec.num_classes, (batch,))
-    # fixed per-class templates (seeded independently of `seed`)
+    labels = rng.integers(0, spec.num_classes, (n,))
+    # fixed per-class templates (seeded independently of the stream rng)
     trng = np.random.default_rng(1234)
     templates = trng.normal(0, 1, (spec.num_classes, 8, 8, 3)).astype(
         np.float32)
     up = templates[labels]
     reps = res // 8 + 1
     up = np.tile(up, (1, reps, reps, 1))[:, :res, :res]
-    noise = rng.normal(0, 0.7, (batch, res, res, 3)).astype(np.float32)
-    return {"images": (up + noise).astype(np.float32),
-            "labels": labels.astype(np.int32)}
+    noise = rng.normal(0, 0.7, (n, res, res, 3)).astype(np.float32)
+    return (up + noise).astype(np.float32), labels.astype(np.int32)
+
+
+def make_image_batch(spec: DatasetSpec, batch: int, *, seed: int,
+                     resolution: int | None = None):
+    """One seeded batch of class-conditional images (train-accuracy
+    trends are meaningful)."""
+    images, labels = class_conditional_images(
+        spec, batch, np.random.default_rng(seed), resolution)
+    return {"images": images, "labels": labels}
 
 
 def make_token_batch(vocab: int, batch: int, seq: int, *, seed: int):

@@ -36,6 +36,18 @@ check:
 
     train --steps 6 --stop-after 3 --ckpt-dir D          # preempted
     train --steps 6 --resume --ckpt-dir D                # same trajectory
+
+Real-image workload (the paper's actual experiments): for vit archs,
+``--dataset cifar10|cifar100`` feeds the CIFAR source (data/datasets.py) —
+the real binary batches when ``--data-dir`` holds them, a deterministic
+procedural CIFAR-like stream otherwise (CI never downloads). ``--augment``
+turns on the on-device RandomCrop+Flip+Mixup/CutMix recipe inside the
+jitted step (rng-threaded from the TrainState, so resumed runs replay the
+exact augmentation stream); ``--label-smoothing`` smooths the train CE.
+``--eval-every N`` runs the sharded eval loop over the held-out split
+every N steps and at exit: integer top-1/top-5 correct counts (exactly
+layout-invariant) + NLL, mask-padded over the non-divisible final batch,
+appended to the metrics history as eval_* rows.
 """
 from __future__ import annotations
 
@@ -72,7 +84,32 @@ def main():
                     help="pipeline stages (1F1B over the `pipe` mesh axis; "
                          "requires --accum >= --pp)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--dataset", default="cifar10")
+    ap.add_argument("--dataset", default="cifar10",
+                    choices=["cifar10", "cifar100", "synthetic"],
+                    help="vit data source: real/procedural CIFAR "
+                         "(data/datasets.py) or the legacy synthetic "
+                         "tensor stream")
+    ap.add_argument("--data-dir", default="",
+                    help="directory holding the CIFAR binary batches "
+                         "(cifar-10-batches-py / cifar-100-python); unset "
+                         "or absent -> deterministic procedural CIFAR "
+                         "(no downloads, CI-safe)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="evaluate on the held-out split every N steps "
+                         "and at the end (0 = no eval; needs a real "
+                         "dataset, i.e. --dataset != synthetic)")
+    ap.add_argument("--eval-batch", type=int, default=0,
+                    help="eval batch size (0 -> --batch); the final "
+                         "non-divisible batch is mask-padded")
+    ap.add_argument("--eval-size", type=int, default=0,
+                    help="truncate the eval split to N examples "
+                         "(0 = full split; procedural default "
+                         f"is small already)")
+    ap.add_argument("--augment", action="store_true",
+                    help="on-device RandomCrop+Flip+Mixup/CutMix inside "
+                         "the jitted step (vit only, rng-threaded from "
+                         "the TrainState so resumes replay the stream)")
+    ap.add_argument("--label-smoothing", type=float, default=0.0)
     ap.add_argument("--seq-parallel", default="none")
     ap.add_argument("--use-pallas", action="store_true",
                     help="flash-attention Pallas kernels (custom-VJP train "
@@ -111,7 +148,7 @@ def main():
     from repro.configs import EngineConfig, get_config, get_smoke_config
     from repro.core import sharding as shd
     from repro.core.engine import DistributedEngine
-    from repro.data import DATASETS, DataPipeline
+    from repro.data import AugmentConfig, DATASETS, DataPipeline, make_source
     from repro.launch.mesh import make_local_mesh
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -120,7 +157,9 @@ def main():
     if args.dtype:
         cfg = cfg.replace(dtype=args.dtype)
     if cfg.arch_type == "vit":
-        cfg = cfg.replace(num_classes=DATASETS[args.dataset].num_classes)
+        spec_name = args.dataset if args.dataset in DATASETS else "cifar10"
+        cfg = cfg.replace(num_classes=DATASETS[spec_name].num_classes,
+                          label_smoothing=args.label_smoothing)
     mesh = make_local_mesh(model=args.model_axis, pipe=args.pp)
     dp = mesh.devices.shape[0]
     ecfg = EngineConfig(
@@ -131,21 +170,41 @@ def main():
         sequence_parallel=args.seq_parallel, pipeline_stages=args.pp,
         seed=args.seed, ckpt_every=args.ckpt_every,
         ckpt_async=not args.ckpt_sync)
-    eng = DistributedEngine(cfg, ecfg, mesh)
+    aug = AugmentConfig(num_classes=cfg.num_classes) \
+        if args.augment and cfg.arch_type == "vit" else None
+    eng = DistributedEngine(cfg, ecfg, mesh, aug=aug)
     print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"devices={mesh.devices.size} dp={dp} pp={args.pp} "
           f"micro_batch={ecfg.derived_micro_batch(dp)} accum={args.accum} "
-          f"zero={args.zero} opt={args.optimizer}")
+          f"zero={args.zero} opt={args.optimizer} "
+          f"aug={'on' if aug else 'off'}")
 
+    source = None
     if cfg.arch_type == "vit":
-        pipe = DataPipeline(kind="image", global_batch=args.batch,
-                            dataset=DATASETS[args.dataset],
-                            resolution=cfg.image_size, seed=args.seed)
+        if args.dataset != "synthetic":
+            # real CIFAR from --data-dir when present, else the
+            # deterministic procedural generator — same cursor contract
+            source = make_source(args.dataset,
+                                 data_dir=args.data_dir or None,
+                                 seed=args.seed, resolution=cfg.image_size,
+                                 eval_size=args.eval_size or None)
+            print(f"[train] dataset={args.dataset} "
+                  f"{'procedural' if source.procedural else 'disk'} "
+                  f"train={source.train_size} eval={source.eval_size}")
+            pipe = DataPipeline(kind="image", global_batch=args.batch,
+                                source=source, seed=args.seed)
+        else:
+            pipe = DataPipeline(kind="image", global_batch=args.batch,
+                                dataset=DATASETS["cifar10"],
+                                resolution=cfg.image_size, seed=args.seed)
     else:
         pipe = DataPipeline(kind="token", global_batch=args.batch,
                             vocab=max(cfg.vocab_size, 2), seq_len=args.seq,
                             epoch_size=args.batch * args.steps,
                             seed=args.seed)
+    if args.eval_every and source is None:
+        raise SystemExit("[train] --eval-every needs a real dataset "
+                         "(--dataset cifar10|cifar100 on a vit arch)")
 
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) >= 0:
         state = eng.restore_state(
@@ -167,6 +226,25 @@ def main():
     saver = eng.make_checkpointer() if ecfg.ckpt_async else None
     hist = []
     t0 = time.time()
+
+    eval_batch = args.eval_batch or args.batch
+    eval_fn = eng.jit_eval_step() if args.eval_every else None
+    last_eval_step = -1
+
+    def run_eval(state, at_step):
+        """Sharded eval over the held-out split; metrics land in history
+        (exact integer counts + rates — the layout-invariant signal)."""
+        nonlocal last_eval_step
+        em = eng.evaluate(state, source.eval_batches(eval_batch),
+                          eval_step=eval_fn)
+        em["step"] = at_step
+        em["wall_s"] = round(time.time() - t0, 2)
+        hist.append(em)
+        last_eval_step = at_step
+        print(f"[eval ] step {at_step:5d} "
+              f"top1={em['eval_acc']:.4f} top5={em['eval_top5_acc']:.4f} "
+              f"loss={em['eval_loss']:.4f} "
+              f"({em['eval_top1_count']}/{em['eval_count']})")
 
     # cursor-addressable data: vit/token archs ride the background
     # prefetcher; audio/vlm use spec-derived synthetic batches addressed
@@ -215,10 +293,14 @@ def main():
                         saver.save(args.ckpt_dir, step + 1, state)
                     else:
                         save_checkpoint(args.ckpt_dir, step + 1, state)
+                if args.eval_every and (step + 1) % args.eval_every == 0:
+                    run_eval(state, step + 1)
     finally:
         if prefetcher is not None:
             prefetcher.close()
 
+    if args.eval_every and int(state.step) != last_eval_step:
+        run_eval(state, int(state.step))    # final-state eval
     if saver is not None:
         saver.wait()                    # drain in-flight async saves
     if args.ckpt_dir and latest_step(args.ckpt_dir) != int(state.step):
@@ -227,10 +309,12 @@ def main():
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(hist, f, indent=1)
-    # final sanity: loss decreased
-    if len(hist) >= 2 and not (hist[-1]["loss"] < hist[0]["loss"]):
+    # final sanity: loss decreased (train rows only; eval rows carry
+    # eval_* keys instead)
+    tr = [h for h in hist if "loss" in h]
+    if len(tr) >= 2 and not (tr[-1]["loss"] < tr[0]["loss"]):
         print("[train] WARNING: loss did not decrease")
-    final = f"final loss {hist[-1]['loss']:.4f}" if hist \
+    final = f"final loss {tr[-1]['loss']:.4f}" if tr \
         else f"no steps run (start={start_step}, end={end_step})"
     print(f"[train] done in {time.time()-t0:.1f}s; {final}")
 

@@ -543,6 +543,52 @@ def _xent(logits, labels, mask=None):
     return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
 
+def _soft_xent(logits, labels, *, smoothing=0.0):
+    """Cross-entropy against a soft (B, C) target distribution — the
+    Mixup/CutMix label path — with optional uniform label smoothing
+    ``y <- (1 - eps) * y + eps / C``. Hard int labels are accepted and
+    one-hotted (the smoothing-only case)."""
+    logits = logits.astype(jnp.float32)
+    num_classes = logits.shape[-1]
+    if labels.ndim == logits.ndim - 1:
+        y = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    else:
+        y = labels.astype(jnp.float32)
+    if smoothing:
+        y = y * (1.0 - smoothing) + smoothing / num_classes
+    logp = logits - jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    return jnp.mean(-jnp.sum(y * logp, axis=-1))
+
+
+def classification_counts(logits, labels, mask=None, *, topk=5):
+    """Integer correctness counts + fp32 NLL sum for classification eval.
+
+    Counts — not means — are the cross-layout reduction unit: summing
+    per-example {0, 1} indicators as integers is exact under ANY dp/pipe
+    sharding (integer addition is associative), so eval accuracy is
+    bitwise layout-invariant. ``mask`` (B,) zeroes padded tail examples of
+    the final non-divisible eval batch. Loss is reported as an fp32 sum of
+    per-example NLL (un-smoothed — eval loss stays recipe-independent);
+    the caller divides by the total count.
+    """
+    logits = logits.astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones(labels.shape[:1], jnp.float32)
+    maski = mask.astype(jnp.int32)
+    pred = jnp.argmax(logits, axis=-1)
+    k = min(topk, logits.shape[-1])
+    _, topi = jax.lax.top_k(logits, k)
+    in_topk = jnp.any(topi == labels[:, None], axis=-1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[..., 0]
+    return {
+        "top1": jnp.sum((pred == labels).astype(jnp.int32) * maski),
+        "top5": jnp.sum(in_topk.astype(jnp.int32) * maski),
+        "count": jnp.sum(maski),
+        "loss_sum": jnp.sum((lse - gold) * mask.astype(jnp.float32)),
+    }
+
+
 def loss_from_logits(cfg, logits, batch, aux=None):
     """Loss + metrics given final-head ``logits`` for ``batch``.
 
@@ -554,9 +600,15 @@ def loss_from_logits(cfg, logits, batch, aux=None):
         aux = {"moe_aux": jnp.float32(0.0)}
     metrics = {}
     if cfg.arch_type == "vit":
-        loss = _xent(logits, batch["labels"])
+        labels = batch["labels"]
+        soft = labels.ndim == 2         # Mixup/CutMix soft-label batches
+        if soft or cfg.label_smoothing > 0.0:
+            loss = _soft_xent(logits, labels, smoothing=cfg.label_smoothing)
+        else:
+            loss = _xent(logits, labels)
+        hard = jnp.argmax(labels, -1) if soft else labels
         metrics["acc"] = jnp.mean(
-            (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+            (jnp.argmax(logits, -1) == hard).astype(jnp.float32))
     elif cfg.arch_type == "audio":
         loss = _xent(logits, batch["labels"], batch["mask"])
     else:

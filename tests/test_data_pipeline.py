@@ -1,12 +1,17 @@
 """Data pipeline determinism: batch seeds must be identical across launcher
-processes (regression for the PYTHONHASHSEED-dependent hash() mix)."""
+processes (regression for the PYTHONHASHSEED-dependent hash() mix), the
+CIFAR source behind the cursor contract, on-device augmentation properties
+(hypothesis), and the Prefetcher thread-lifecycle regressions."""
+import gc
+import pickle
 import subprocess
 import sys
+import time
 
 import numpy as np
 import pytest
 
-from repro.data import DATASETS, DataPipeline
+from repro.data import CIFARSource, DATASETS, DataPipeline
 from repro.data.pipeline import batch_seed
 
 
@@ -114,3 +119,184 @@ def test_prefetcher_propagates_synthesis_errors():
     with p.prefetch(0, 0) as pf:
         with pytest.raises(RuntimeError, match="prefetch thread failed"):
             next(pf)
+
+
+# ---------------------------------------------------------------------------
+# CIFAR source (data/datasets.py): procedural determinism, the disk loader
+# against synthesized pickle batches, and eval-split padding
+# ---------------------------------------------------------------------------
+
+def test_procedural_source_is_deterministic():
+    """Two independently-constructed sources with the same seed agree on
+    BOTH splits byte-for-byte — the cross-process/layout contract."""
+    a = CIFARSource("cifar10", seed=9, eval_size=40)
+    b = CIFARSource("cifar10", seed=9, eval_size=40)
+    np.testing.assert_array_equal(a._eval_images, b._eval_images)
+    np.testing.assert_array_equal(a._eval_labels, b._eval_labels)
+    ba = a.train_batch(8, seed=123)
+    bb = b.train_batch(8, seed=123)
+    np.testing.assert_array_equal(ba["images"], bb["images"])
+    np.testing.assert_array_equal(ba["labels"], bb["labels"])
+    # different seeds -> different eval data
+    c = CIFARSource("cifar10", seed=10, eval_size=40)
+    assert not np.array_equal(a._eval_images, c._eval_images)
+
+
+def test_source_behind_pipeline_cursor_contract():
+    """batch_at(epoch, index) through a CIFARSource is pure in
+    (seed, epoch, index) — the elastic-resume addressability contract."""
+    mk = lambda: DataPipeline(kind="image", global_batch=4, seed=7,
+                              source=CIFARSource("cifar10", seed=7,
+                                                 eval_size=16))
+    p1, p2 = mk(), mk()
+    for e, i in ((0, 0), (0, 3), (2, 1)):
+        b1, b2 = p1.batch_at(e, i), p2.batch_at(e, i)
+        np.testing.assert_array_equal(b1["images"], b2["images"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    assert not np.array_equal(p1.batch_at(0, 0)["labels"],
+                              p1.batch_at(1, 0)["labels"]) or \
+        not np.array_equal(p1.batch_at(0, 0)["images"],
+                           p1.batch_at(1, 0)["images"])
+
+
+def _write_fake_cifar10(root):
+    """Tiny but format-faithful cifar-10-batches-py distribution."""
+    d = root / "cifar-10-batches-py"
+    d.mkdir()
+    rng = np.random.default_rng(0)
+    for name, n in [(f"data_batch_{i}", 4) for i in range(1, 6)] + \
+            [("test_batch", 10)]:
+        data = rng.integers(0, 256, (n, 3072), dtype=np.uint8)
+        labels = rng.integers(0, 10, (n,)).tolist()
+        with open(d / name, "wb") as f:
+            pickle.dump({b"data": data, b"labels": labels}, f)
+    return data  # the test batch's raw rows
+
+
+def test_disk_loader_reads_pickle_batches(tmp_path):
+    raw_test = _write_fake_cifar10(tmp_path)
+    src = CIFARSource("cifar10", data_dir=str(tmp_path), seed=0)
+    assert not src.procedural
+    assert src.train_size == 20 and src.eval_size == 10
+    # normalization: recompute one pixel by hand from the raw CHW rows
+    img0 = raw_test[0].reshape(3, 32, 32).transpose(1, 2, 0)
+    expect = (img0[0, 0].astype(np.float32) / 255.0
+              - np.asarray(src.mean, np.float32)) \
+        / np.asarray(src.std, np.float32)
+    np.testing.assert_allclose(src._eval_images[0, 0, 0], expect,
+                               rtol=1e-6)
+    b = src.train_batch(6, seed=5)
+    assert b["images"].shape == (6, 32, 32, 3)
+    assert b["labels"].dtype == np.int32
+    # purity in seed holds for the disk path too
+    b2 = src.train_batch(6, seed=5)
+    np.testing.assert_array_equal(b["images"], b2["images"])
+
+
+def test_disk_loader_upsamples_to_model_resolution(tmp_path):
+    _write_fake_cifar10(tmp_path)
+    src = CIFARSource("cifar10", data_dir=str(tmp_path), resolution=64)
+    b = next(src.eval_batches(4))
+    assert b["images"].shape == (4, 64, 64, 3)
+    # nearest-neighbor: each native pixel becomes a constant 2x2 block
+    np.testing.assert_array_equal(b["images"][0, 0, 0],
+                                  b["images"][0, 1, 1])
+
+
+def test_eval_batches_pad_final_batch_with_mask():
+    src = CIFARSource("cifar10", seed=1, eval_size=21)
+    batches = list(src.eval_batches(8))
+    assert len(batches) == 3 == src.num_eval_batches(8)
+    for b in batches:
+        assert b["images"].shape == (8, 32, 32, 3)
+        assert b["mask"].shape == (8,)
+    np.testing.assert_array_equal(batches[0]["mask"], np.ones(8))
+    np.testing.assert_array_equal(batches[2]["mask"],
+                                  [1, 1, 1, 1, 1, 0, 0, 0])
+    # padded tail is zeroed (metric-invisible under the mask)
+    assert np.all(batches[2]["images"][5:] == 0.0)
+    # concatenating the masked examples reproduces the split exactly
+    got = np.concatenate([b["labels"][b["mask"] > 0] for b in batches])
+    np.testing.assert_array_equal(got, src._eval_labels)
+
+
+def test_unknown_dataset_rejected():
+    with pytest.raises(ValueError, match="unknown CIFAR dataset"):
+        CIFARSource("imagenet100")
+
+
+def test_explicit_data_dir_without_batches_raises(tmp_path):
+    """An explicitly-given --data-dir that lacks the pickle batches must
+    raise, NOT silently fall back to procedural data (a reproduction run
+    reporting plausible metrics on fake data is the worst failure)."""
+    with pytest.raises(FileNotFoundError, match="does not contain"):
+        CIFARSource("cifar10", data_dir=str(tmp_path))
+    # unset data_dir is the sanctioned procedural path
+    assert CIFARSource("cifar10", data_dir=None).procedural
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher thread lifecycle (regression: a producer error with a full
+# queue — or a consumer that walks away — must never strand the thread)
+# ---------------------------------------------------------------------------
+
+def _wait_until(cond, timeout=5.0):
+    deadline = time.time() + timeout
+    while not cond() and time.time() < deadline:
+        time.sleep(0.01)
+    assert cond()
+
+
+def test_prefetcher_close_terminates_thread_and_unblocks_consumer():
+    p = _pipe()
+    pf = p.prefetch(0, 0)
+    next(pf)
+    pf.close()
+    assert not pf._thread.is_alive()
+    # next() after close must NOT block on the drained queue
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()          # idempotent
+
+
+def test_prefetcher_error_with_full_queue_does_not_strand_thread():
+    """Producer raises while the queue is full and the consumer has
+    stopped consuming — the old blocking error-put stranded the thread
+    here; the stop-aware put lets close() reclaim it."""
+    p = _pipe()
+    orig = p.batch_at
+    p.batch_at = lambda e, i: orig(e, i) if (e, i) == (0, 0) \
+        else (_ for _ in ()).throw(ValueError("boom"))
+    pf = p.prefetch(0, 0)   # depth=1: first batch fills the queue,
+    #                         second raises -> error put on a FULL queue
+    _wait_until(lambda: pf._error is not None)
+    assert pf._thread.is_alive()        # parked in the stop-aware put
+    pf.close()
+    assert not pf._thread.is_alive()    # reclaimed, not stranded
+
+
+def test_prefetcher_dropped_reference_reclaims_thread():
+    """Consumer walks away without close(): __del__ must stop the
+    producer instead of leaving it parked forever."""
+    p = _pipe()
+    pf = p.prefetch(0, 0)
+    thread = pf._thread
+    next(pf)
+    del pf
+    gc.collect()
+    _wait_until(lambda: not thread.is_alive())
+
+
+def test_prefetcher_error_after_ok_items_still_propagates():
+    """Error queued behind buffered ok items: the consumer sees the good
+    batches first, then the RuntimeError, and the thread is gone."""
+    p = _pipe()
+    orig = p.batch_at
+    p.batch_at = lambda e, i: orig(e, i) if i < 2 \
+        else (_ for _ in ()).throw(ValueError("boom"))
+    with p.prefetch(0, 0, depth=2) as pf:
+        assert next(pf)[0] == (0, 0)
+        assert next(pf)[0] == (0, 1)
+        with pytest.raises(RuntimeError, match="prefetch thread failed"):
+            next(pf)
+    assert not pf._thread.is_alive()

@@ -182,3 +182,115 @@ for a, b in zip(ref, res):
 print("OK", ref)
 """, devices=4, timeout=900)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# sharded evaluation (core/engine.py evaluate): layout-invariance of the
+# integer metric counts + augmented-training resume parity
+# ---------------------------------------------------------------------------
+
+_EVAL = r"""
+import jax, numpy as np
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core.engine import DistributedEngine
+from repro.data import AugmentConfig, CIFARSource, DataPipeline
+
+CFG = get_smoke_config("vit-b16").replace(dtype="float32")
+EVAL_SIZE = 52      # 52 % 8 != 0 -> the final eval batch is mask-padded
+
+def make_engine(dp, pipe=1, zero=0, aug=None):
+    if pipe > 1:
+        mesh = jax.make_mesh((dp, pipe, 1), ("data", "pipe", "model"))
+    else:
+        mesh = jax.make_mesh((dp, 1), ("data", "model"))
+    ecfg = EngineConfig(train_batch_size=8, gradient_accumulation_steps=2,
+                        zero_stage=zero, lr=1e-3, total_steps=10,
+                        warmup_steps=1, pipeline_stages=pipe)
+    return DistributedEngine(CFG, ecfg, mesh, aug=aug)
+
+def source():
+    return CIFARSource("cifar10", seed=3, eval_size=EVAL_SIZE)
+"""
+
+
+def test_eval_counts_layout_invariant_fast():
+    """Top-1/top-5 correct counts over a fixed procedural CIFAR split are
+    *bitwise-identical integers* across dp1, dp4, and dp2 x pp2 — the
+    integer all-reduce makes eval accuracy exactly layout-independent —
+    including the mask-padded non-divisible final batch (52 = 6 x 8 + 4).
+    The fp32 NLL sum only agrees to reduction-order tolerance."""
+    out = run_subprocess(_EVAL + r"""
+src = source()
+assert src.num_eval_batches(8) * 8 > src.eval_size   # padding exercised
+
+results = []
+for dp, pp in ((1, 1), (4, 1), (2, 2)):
+    eng = make_engine(dp, pipe=pp)
+    state = eng.init_state(seed=0)
+    results.append(eng.evaluate(state, src.eval_batches(8)))
+
+base = results[0]
+assert base["eval_count"] == EVAL_SIZE, base            # mask excluded pads
+assert 0 < base["eval_top5_count"] <= EVAL_SIZE, base
+assert base["eval_top1_count"] <= base["eval_top5_count"], base
+for res in results[1:]:
+    for k in ("eval_top1_count", "eval_top5_count", "eval_count"):
+        assert res[k] == base[k], (k, results)          # exact ints
+    assert abs(res["eval_loss"] - base["eval_loss"]) < 1e-5, results
+print("OK", base)
+""", devices=4, timeout=900)
+    assert "OK" in out
+
+
+def test_augmented_resume_replays_stream_fast():
+    """Interrupt an *augmented* run (crop/flip/Mixup/CutMix keyed on
+    fold_in(state.rng, step)), save, restore into a DIFFERENT layout:
+    the resumed run replays the exact augmentation stream — per-step loss
+    parity <= 1e-5 against the uninterrupted run — and the final eval
+    metrics agree (counts exactly, loss to 1e-5)."""
+    out = run_subprocess(_EVAL + r"""
+import tempfile
+AUG = AugmentConfig(num_classes=10)
+
+def run(eng, state, pipe, lo, hi):
+    step = eng.jit_train_step(donate=False)
+    losses = []
+    with eng.mesh:
+        for i in range(lo, hi):
+            e, ix = int(state.epoch), int(state.batch_index)
+            b = pipe.device_put(pipe.batch_at(e, ix))
+            state, m = step(state, b)
+            state = state.replace(
+                epoch=jax.numpy.int32(pipe.next_cursor(e, ix)[0]),
+                batch_index=jax.numpy.int32(pipe.next_cursor(e, ix)[1]))
+            losses.append(float(m["loss"]))
+    return state, losses
+
+def data():
+    return DataPipeline(kind="image", global_batch=8, seed=3,
+                        source=source())
+
+ref_eng = make_engine(4, aug=AUG)
+s, ref = run(ref_eng, ref_eng.init_state(seed=0), data(), 0, 5)
+ref_eval = ref_eng.evaluate(s, source().eval_batches(8))
+
+eng1 = make_engine(4, aug=AUG)
+s1, head = run(eng1, eng1.init_state(seed=0), data(), 0, 2)
+d = tempfile.mkdtemp()
+eng1.save_state(d, s1)
+
+eng2 = make_engine(2, zero=1, aug=AUG)      # resume in a different layout
+s2 = eng2.restore_state(d)
+assert (int(s2.epoch), int(s2.batch_index)) == (int(s1.epoch),
+                                                int(s1.batch_index))
+s2, tail = run(eng2, s2, data(), 2, 5)
+got = head + tail
+for a, b in zip(ref, got):
+    assert abs(a - b) < 1e-5, (ref, got)
+res_eval = eng2.evaluate(s2, source().eval_batches(8))
+for k in ("eval_top1_count", "eval_top5_count", "eval_count"):
+    assert res_eval[k] == ref_eval[k], (ref_eval, res_eval)
+assert abs(res_eval["eval_loss"] - ref_eval["eval_loss"]) < 1e-5
+print("OK", ref, ref_eval["eval_top1_count"])
+""", devices=4, timeout=900)
+    assert "OK" in out

@@ -1,0 +1,153 @@
+"""Unit tests for the evaluation metric math (models/transformer.py):
+classification_counts vs a numpy oracle (mask-aware integer counts +
+NLL sum), the soft-label / label-smoothing cross-entropy, and the
+engine's single-device eval loop plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import EngineConfig, get_smoke_config
+from repro.core.engine import DistributedEngine
+from repro.data import CIFARSource
+from repro.launch.mesh import make_local_mesh
+from repro.models.transformer import _soft_xent, _xent, \
+    classification_counts, loss_from_logits
+
+
+def _np_counts(logits, labels, mask, topk=5):
+    order = np.argsort(-logits, axis=-1)
+    top1 = sum(int(m) for o, l, m in zip(order[:, 0], labels, mask)
+               if o == l)
+    top5 = sum(int(m) for o, l, m in zip(order[:, :topk], labels, mask)
+               if l in o)
+    p = logits - logits.max(-1, keepdims=True)
+    logp = p - np.log(np.exp(p).sum(-1, keepdims=True))
+    nll = -logp[np.arange(len(labels)), labels]
+    return top1, top5, float((nll * mask).sum()), int(mask.sum())
+
+
+def test_classification_counts_match_numpy_oracle():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(0, 2, (17, 10)).astype(np.float32)
+    labels = rng.integers(0, 10, (17,)).astype(np.int32)
+    mask = (rng.random(17) > 0.3).astype(np.float32)
+    got = classification_counts(jnp.asarray(logits), jnp.asarray(labels),
+                                jnp.asarray(mask))
+    t1, t5, ls, n = _np_counts(logits, labels, mask)
+    assert int(got["top1"]) == t1
+    assert int(got["top5"]) == t5
+    assert int(got["count"]) == n
+    np.testing.assert_allclose(float(got["loss_sum"]), ls, rtol=1e-5)
+    assert got["top1"].dtype == jnp.int32
+    assert got["top5"].dtype == jnp.int32
+
+
+def test_classification_counts_default_mask_and_small_class_count():
+    """No mask -> every example counts; top-5 clamps to the class count
+    (top-k over 3 classes is always a hit)."""
+    logits = jnp.asarray(np.random.default_rng(1).normal(size=(6, 3)),
+                         jnp.float32)
+    labels = jnp.asarray([0, 1, 2, 0, 1, 2], jnp.int32)
+    got = classification_counts(logits, labels)
+    assert int(got["count"]) == 6
+    assert int(got["top5"]) == 6
+
+
+def test_padded_examples_are_metric_invisible():
+    """A zero-padded tail under a zero mask contributes nothing — the
+    non-divisible final eval batch contract."""
+    rng = np.random.default_rng(2)
+    logits = rng.normal(0, 1, (8, 10)).astype(np.float32)
+    labels = rng.integers(0, 10, (8,)).astype(np.int32)
+    mask = np.asarray([1, 1, 1, 1, 1, 0, 0, 0], np.float32)
+    a = classification_counts(jnp.asarray(logits), jnp.asarray(labels),
+                              jnp.asarray(mask))
+    # mutate the padded tail wildly: nothing may change
+    logits[5:] = 1e6
+    labels[5:] = 0
+    b = classification_counts(jnp.asarray(logits), jnp.asarray(labels),
+                              jnp.asarray(mask))
+    for k in ("top1", "top5", "count"):
+        assert int(a[k]) == int(b[k])
+    np.testing.assert_allclose(float(a["loss_sum"]), float(b["loss_sum"]))
+
+
+def test_soft_xent_reduces_to_hard_xent():
+    """One-hot soft labels with no smoothing reproduce the hard-label CE
+    (the soft path is a strict generalization)."""
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(0, 2, (9, 7)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 7, (9,)), jnp.int32)
+    hard = _xent(logits, labels)
+    soft = _soft_xent(logits, jax.nn.one_hot(labels, 7))
+    np.testing.assert_allclose(float(hard), float(soft), rtol=1e-6)
+    # hard ints through the soft path too (the smoothing-only case)
+    np.testing.assert_allclose(float(_soft_xent(logits, labels)),
+                               float(hard), rtol=1e-6)
+
+
+def test_label_smoothing_formula():
+    """smoothing eps mixes eps/C uniform mass into the target."""
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.normal(0, 1, (5, 4)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 4, (5,)), jnp.int32)
+    eps = 0.1
+    got = float(_soft_xent(logits, labels, smoothing=eps))
+    lp = np.asarray(logits, np.float64)
+    lp = lp - np.log(np.exp(lp - lp.max(-1, keepdims=True)).sum(
+        -1, keepdims=True)) - lp.max(-1, keepdims=True)
+    y = np.eye(4)[np.asarray(labels)] * (1 - eps) + eps / 4
+    np.testing.assert_allclose(got, float(np.mean(-(y * lp).sum(-1))),
+                               rtol=1e-5)
+
+
+def test_loss_from_logits_soft_label_path():
+    """The vit loss accepts Mixup soft labels: accuracy is computed
+    against the dominant class, and the smoothing knob engages."""
+    cfg = get_smoke_config("vit-b16")
+    rng = np.random.default_rng(5)
+    logits = jnp.asarray(rng.normal(0, 1, (6, 10)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, (6,)), jnp.int32)
+    lam = 0.7
+    soft = lam * jax.nn.one_hot(labels, 10) + \
+        (1 - lam) * jax.nn.one_hot(jnp.roll(labels, 1), 10)
+    loss_s, m_s = loss_from_logits(cfg, logits, {"labels": soft})
+    loss_h, m_h = loss_from_logits(cfg, logits, {"labels": labels})
+    assert np.isfinite(float(loss_s))
+    # dominant class of the soft target == the hard label (lam > 0.5)
+    np.testing.assert_allclose(float(m_s["acc"]), float(m_h["acc"]))
+    sm = cfg.replace(label_smoothing=0.1)
+    loss_sm, _ = loss_from_logits(sm, logits, {"labels": labels})
+    assert abs(float(loss_sm) - float(loss_h)) > 1e-6
+
+
+def test_engine_evaluate_single_device():
+    """End-to-end eval loop on one device: counts accumulate across the
+    padded batch stream and rates derive from the exact split size."""
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+    eng = DistributedEngine(cfg, EngineConfig(train_batch_size=8,
+                                              total_steps=10,
+                                              warmup_steps=1),
+                            make_local_mesh())
+    src = CIFARSource("cifar10", seed=0, eval_size=21)
+    res = eng.evaluate(eng.init_state(seed=0), src.eval_batches(8))
+    assert res["eval_count"] == 21
+    assert 0 <= res["eval_top1_count"] <= res["eval_top5_count"] <= 21
+    assert res["eval_acc"] == res["eval_top1_count"] / 21
+    assert np.isfinite(res["eval_loss"])
+    # deterministic: same state + split -> identical metrics
+    res2 = eng.evaluate(eng.init_state(seed=0), src.eval_batches(8))
+    assert res == res2
+
+
+def test_engine_rejects_augment_with_pipeline_or_non_vit():
+    from repro.data import AugmentConfig
+    mesh = make_local_mesh()
+    aug = AugmentConfig(num_classes=10)
+    lm = get_smoke_config("qwen2.5-14b")
+    with pytest.raises(ValueError, match="vit"):
+        DistributedEngine(lm, EngineConfig(train_batch_size=8,
+                                           total_steps=10), mesh, aug=aug)
+    with pytest.raises(ValueError, match="num_classes"):
+        AugmentConfig(num_classes=0).validate()
