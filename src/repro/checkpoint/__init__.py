@@ -1,7 +1,13 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     AsyncCheckpointer,
+    CheckpointCorruptError,
     checkpoint_size_report,
+    gc_checkpoints,
     latest_step,
+    latest_valid_step,
+    list_steps,
     restore_checkpoint,
+    restore_latest_valid,
     save_checkpoint,
+    verify_checkpoint,
 )

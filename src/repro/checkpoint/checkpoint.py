@@ -32,6 +32,21 @@ step critical path: the device→host shard snapshot happens synchronously
 away), serialization runs on a background thread, the directory rename is
 the commit point, and in-flight saves are bounded with backpressure.
 
+Hardened IO (the resilience layer — ROADMAP "Resilience"):
+
+* the manifest records a **crc32 per shard**; restore verifies every
+  shard it reads and raises :class:`CheckpointCorruptError` on mismatch
+  (or on an unreadable shard file) instead of silently loading garbage;
+* save IO retries transient ``OSError``s with jittered-exponential
+  backoff (`repro.resilience.backoff`) — the tmp-dir staging is
+  idempotent, so a half-written attempt is simply rebuilt;
+* :func:`restore_latest_valid` falls back to the **newest valid earlier
+  step** when the latest is torn or corrupt, and :func:`latest_step`
+  skips manifest-less and ``*.tmp`` directories instead of tripping;
+* :func:`gc_checkpoints` retains the newest ``keep_last_k`` steps but
+  NEVER deletes the newest step that verifies — a retention policy
+  cannot be allowed to destroy the only restorable state.
+
 Multi-host caveat (single-controller repo): every process would write its
 own ``shards-p{NN}.npz`` but the manifest is written by process 0 from its
 local shard table; a true multi-host deployment needs a manifest merge
@@ -44,14 +59,29 @@ import os
 import re
 import shutil
 import threading
+import zlib
+from typing import Optional, Tuple
 
 import jax
 import ml_dtypes
 import numpy as np
 
 from repro.core import sharding as shd
+from repro.resilience import faults as _faults
+from repro.resilience.backoff import BackoffPolicy
 
 FORMAT = "repro-elastic-ckpt/v1"
+
+# save-side IO retry: a handful of quick attempts — a checkpoint that
+# cannot land within this budget is a real outage, not a blip
+DEFAULT_IO_BACKOFF = BackoffPolicy(max_attempts=4, base_delay=0.05,
+                                   multiplier=2.0, max_delay=1.0,
+                                   jitter=0.5)
+
+
+class CheckpointCorruptError(ValueError):
+    """Checkpoint bytes fail verification (checksum mismatch, unreadable
+    shard file, missing manifest) — the restore-fallback trigger."""
 
 
 def _np_dtype(name: str):
@@ -127,7 +157,9 @@ def _snapshot(tree) -> dict:
 def _write_snapshot(ckpt_dir: str, step: int, snap: dict) -> str:
     """Serialize a snapshot to ``step_{step}``: shard npz + manifest into a
     tmp directory, then atomic rename-on-complete (readers never observe a
-    partial checkpoint; ``latest_step`` ignores ``*.tmp``)."""
+    partial checkpoint; ``latest_step`` ignores ``*.tmp``). Idempotent —
+    a retried attempt rebuilds the tmp staging dir from scratch."""
+    _faults.check("ckpt_write", step)   # chaos harness (no-op in prod)
     proc = jax.process_index()
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -143,10 +175,11 @@ def _write_snapshot(ckpt_dir: str, step: int, snap: dict) -> str:
             k = f"a{slot}"
             slot += 1
             # raw bytes: npz cannot serialize ml_dtypes (bfloat16 etc.)
-            arrays[k] = np.frombuffer(data.tobytes(), np.uint8)
+            raw = data.tobytes()
+            arrays[k] = np.frombuffer(raw, np.uint8)
             entries.append({"file": shard_file, "key": k,
                             "shape": list(data.shape), "index": ranges,
-                            "device": dev})
+                            "device": dev, "crc32": zlib.crc32(raw)})
         leaves[key] = {"dtype": meta["dtype"], "shape": meta["shape"],
                        "spec": meta["spec"], "shards": entries}
     np.savez(os.path.join(tmp, shard_file), **arrays)
@@ -157,14 +190,36 @@ def _write_snapshot(ckpt_dir: str, step: int, snap: dict) -> str:
     if os.path.isdir(final):
         shutil.rmtree(final)            # re-save of the same step
     os.rename(tmp, final)
+    _faults.corrupt_committed(final, step)  # chaos harness (no-op in prod)
     return final
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+def _write_with_retry(ckpt_dir: str, step: int, snap: dict,
+                      retry: Optional[BackoffPolicy]) -> str:
+    """Write, retrying transient IO failures (OSError) with backoff;
+    persistent failures (anything else) propagate immediately."""
+    if retry is None:
+        return _write_snapshot(ckpt_dir, step, snap)
+    return retry.retry(
+        lambda: _write_snapshot(ckpt_dir, step, snap),
+        retryable=(OSError,),
+        on_retry=lambda a, d, e: print(
+            f"[ckpt] save step {step} attempt {a + 1} failed ({e}); "
+            f"retrying in {d:.2f}s", flush=True))
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *,
+                    retry: Optional[BackoffPolicy] = DEFAULT_IO_BACKOFF,
+                    keep_last_k: int = 0) -> str:
     """Synchronous shard-local save. ``tree`` is any pytree of arrays
-    (typically a full ``TrainState``)."""
+    (typically a full ``TrainState``). Transient IO errors are retried
+    per ``retry``; ``keep_last_k`` > 0 runs retention GC after the
+    commit (never deleting the newest verifiable step)."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    return _write_snapshot(ckpt_dir, step, _snapshot(tree))
+    path = _write_with_retry(ckpt_dir, step, _snapshot(tree), retry)
+    if keep_last_k:
+        gc_checkpoints(ckpt_dir, keep_last_k)
+    return path
 
 
 class AsyncCheckpointer:
@@ -175,13 +230,29 @@ class AsyncCheckpointer:
     serialization to a background thread; when ``max_in_flight`` writes are
     already pending it blocks on the oldest — backpressure instead of
     unbounded host-memory growth. ``wait()`` drains and re-raises the first
-    background failure; failures also surface on the next ``save``.
+    background failure; failures also FAIL FAST on the next ``save``
+    (both before and after the backpressure wait — a run must not keep
+    training for another ``ckpt_every`` steps on top of a save path that
+    is already broken).
+
+    Background writes retry transient IO errors with ``retry`` (the
+    hardened-IO policy) and run retention GC when ``keep_last_k`` > 0.
+
+    ``close()`` drains WITHOUT raising — the stored failure is logged,
+    never swallowed silently — for teardown paths where an exception is
+    already in flight; ``__exit__`` closes on an exceptional exit and
+    waits (re-raising) on a clean one. ``__del__`` is belt-and-braces
+    ``close()``.
     """
 
-    def __init__(self, max_in_flight: int = 2):
+    def __init__(self, max_in_flight: int = 2,
+                 retry: Optional[BackoffPolicy] = DEFAULT_IO_BACKOFF,
+                 keep_last_k: int = 0):
         if max_in_flight < 1:
             raise ValueError(f"max_in_flight must be >= 1: {max_in_flight}")
         self._max = max_in_flight
+        self._retry = retry
+        self._keep_last_k = keep_last_k
         self._pending: list = []
         self._errors: list = []
         self._lock = threading.Lock()
@@ -208,7 +279,9 @@ class AsyncCheckpointer:
 
         def run():
             try:
-                _write_snapshot(ckpt_dir, step, snap)
+                _write_with_retry(ckpt_dir, step, snap, self._retry)
+                if self._keep_last_k:
+                    gc_checkpoints(ckpt_dir, self._keep_last_k)
             except BaseException as e:  # noqa: BLE001 — surfaced in wait()
                 with self._lock:
                     self._errors.append(e)
@@ -225,12 +298,37 @@ class AsyncCheckpointer:
         self._pending.clear()
         self._raise_if_failed()
 
+    def close(self):
+        """Drain in-flight saves without raising; a stored background
+        failure is LOGGED (never silently discarded) — the teardown
+        counterpart of ``wait()`` for already-failing exits."""
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+        with self._lock:
+            errors, self._errors = self._errors, []
+        for err in errors:
+            print(f"[ckpt] WARNING: async checkpoint save failed "
+                  f"(surfaced at close): {err!r}", flush=True)
+
     def __enter__(self):
         return self
 
-    def __exit__(self, *exc):
-        self.wait()
+    def __exit__(self, exc_type, *exc):
+        # on an exceptional exit, don't mask the in-flight exception with
+        # a save failure — close() logs it instead
+        if exc_type is not None:
+            self.close()
+        else:
+            self.wait()
         return False
+
+    def __del__(self):
+        try:
+            if self._pending or self._errors:
+                self.close()
+        except Exception:   # noqa: BLE001 — interpreter-shutdown tolerant
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -299,10 +397,8 @@ def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
         dtype = _np_dtype(meta["dtype"])
         out = np.zeros(tuple(meta["shape"]), dtype)
         for e in meta["shards"]:
-            if e["file"] not in npz_cache:
-                npz_cache[e["file"]] = np.load(os.path.join(d, e["file"]))
-            raw = npz_cache[e["file"]][e["key"]]
-            sub = np.frombuffer(raw.tobytes(), dtype).reshape(e["shape"])
+            raw = _read_shard_bytes(d, e, npz_cache, context=key)
+            sub = np.frombuffer(raw, dtype).reshape(e["shape"])
             out[tuple(slice(a, b) for a, b in e["index"])] = sub
         out_leaves.append(out)
     tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
@@ -313,12 +409,149 @@ def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
     return tree
 
 
-def latest_step(ckpt_dir: str) -> int:
+def _read_shard_bytes(d: str, entry: dict, npz_cache: dict, *,
+                      context: str) -> bytes:
+    """One shard's raw bytes, checksum-verified against the manifest.
+    Unreadable files (torn zip, IO error) and crc mismatches both raise
+    :class:`CheckpointCorruptError` — the fallback-restore trigger."""
+    try:
+        if entry["file"] not in npz_cache:
+            npz_cache[entry["file"]] = np.load(
+                os.path.join(d, entry["file"]))
+        raw = npz_cache[entry["file"]][entry["key"]].tobytes()
+    except Exception as e:  # noqa: BLE001 — any read failure = corrupt
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: shard file {entry['file']!r} "
+            f"(leaf {context}, key {entry['key']}) unreadable: "
+            f"{e!r}") from e
+    if "crc32" in entry and zlib.crc32(raw) != entry["crc32"]:
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: shard {entry['key']} of leaf {context} "
+            f"fails crc32 verification (manifest {entry['crc32']}, "
+            f"bytes {zlib.crc32(raw)}) — torn or corrupt write")
+    return raw
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> None:
+    """Full integrity check of one step: manifest present with the right
+    format, every shard file readable, every per-shard crc32 matching.
+    Raises :class:`CheckpointCorruptError` (or ``FileNotFoundError`` for
+    a missing manifest); returns None when the checkpoint is sound.
+    Pre-checksum (v1 manifests without ``crc32``) checkpoints pass on
+    readability alone."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest_path = os.path.join(d, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise
+    except Exception as e:  # noqa: BLE001 — torn manifest = corrupt
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: manifest unreadable: {e!r}") from e
+    if manifest.get("format") != FORMAT:
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: format {manifest.get('format')!r} != "
+            f"{FORMAT!r}")
+    npz_cache: dict = {}
+    for key, meta in manifest["leaves"].items():
+        for e in meta["shards"]:
+            _read_shard_bytes(d, e, npz_cache, context=key)
+
+
+def list_steps(ckpt_dir: str) -> list:
+    """All committed step numbers, ascending. A step counts only when
+    its ``manifest.json`` exists — ``*.tmp`` staging dirs (never renamed
+    in) and manifest-less torn directories are skipped, not tripped on."""
     if not os.path.isdir(ckpt_dir):
-        return -1
-    steps = [int(m.group(1)) for name in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)$", name))]
-    return max(steps, default=-1)
+        return []
+    return sorted(
+        int(m.group(1)) for name in os.listdir(ckpt_dir)
+        if (m := re.match(r"step_(\d+)$", name))
+        and os.path.isfile(os.path.join(ckpt_dir, name, "manifest.json")))
+
+
+def latest_step(ckpt_dir: str) -> int:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else -1
+
+
+def latest_valid_step(ckpt_dir: str, before: Optional[int] = None) -> int:
+    """Newest step that passes :func:`verify_checkpoint` (optionally
+    strictly below ``before``); -1 when none does."""
+    for step in reversed(list_steps(ckpt_dir)):
+        if before is not None and step >= before:
+            continue
+        try:
+            verify_checkpoint(ckpt_dir, step)
+            return step
+        except (CheckpointCorruptError, OSError):
+            continue
+    return -1
+
+
+def restore_latest_valid(ckpt_dir: str, like, shardings=None
+                         ) -> Tuple[object, int]:
+    """Elastic restore of the newest VALID checkpoint: steps are tried
+    newest-first, each integrity-verified (checksums) before restore; a
+    torn or corrupt step is reported and skipped. Template mismatches
+    (strict ``KeyError``/``ValueError`` from :func:`restore_checkpoint`)
+    still propagate — a config error must never be "fixed" by silently
+    rolling back to an older checkpoint that happens to match.
+
+    Returns ``(tree, step)``; raises ``FileNotFoundError`` when no valid
+    checkpoint exists at all."""
+    steps = list_steps(ckpt_dir)
+    for step in reversed(steps):
+        try:
+            verify_checkpoint(ckpt_dir, step)
+        except (CheckpointCorruptError, OSError) as e:
+            print(f"[ckpt] step {step} failed verification ({e}); "
+                  f"falling back to the previous checkpoint", flush=True)
+            continue
+        return restore_checkpoint(ckpt_dir, step, like,
+                                  shardings=shardings), step
+    raise FileNotFoundError(
+        f"no valid checkpoint in {ckpt_dir!r} "
+        f"({len(steps)} step dir(s) present, all failed verification)"
+        if steps else f"no checkpoint step_* directories in {ckpt_dir!r}")
+
+
+def gc_checkpoints(ckpt_dir: str, keep_last_k: int) -> list:
+    """Retention GC: delete all but the newest ``keep_last_k`` committed
+    steps — EXCEPT the newest step that verifies, which is never deleted
+    even when older than the retention window (if every retained step is
+    torn/corrupt, the last restorable state must survive). Returns the
+    deleted step numbers."""
+    if keep_last_k < 1:
+        raise ValueError(f"keep_last_k must be >= 1: {keep_last_k}")
+    steps = list_steps(ckpt_dir)
+    if len(steps) <= keep_last_k:
+        return []
+    keep = set(steps[-keep_last_k:])
+    # newest-first: in the healthy case the newest kept step verifies on
+    # the first try and the scan stops there
+    if not any(_is_valid(ckpt_dir, s)
+               for s in sorted(keep, reverse=True)):
+        newest_valid = latest_valid_step(ckpt_dir)
+        if newest_valid >= 0:
+            keep.add(newest_valid)
+    deleted = []
+    for step in steps:
+        if step in keep:
+            continue
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{step:08d}"),
+                      ignore_errors=True)
+        deleted.append(step)
+    return deleted
+
+
+def _is_valid(ckpt_dir: str, step: int) -> bool:
+    try:
+        verify_checkpoint(ckpt_dir, step)
+        return True
+    except (CheckpointCorruptError, OSError):
+        return False
 
 
 def checkpoint_size_report(ckpt_dir: str, step: int) -> dict:

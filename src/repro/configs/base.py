@@ -199,6 +199,16 @@ class EngineConfig:
     ckpt_every: int = 0
     ckpt_async: bool = True
     ckpt_max_in_flight: int = 2
+    # retention GC: keep the newest K checkpoints (0 = keep all); the GC
+    # never deletes the newest step that passes verification
+    ckpt_keep_last: int = 0
+    # anomaly guard (resilience): in-jit finite checks on loss and global
+    # grad-norm produce a step_ok metric; a non-finite step SKIPS the
+    # optimizer update (params/opt/step unchanged — the host loop retries
+    # the same cursor batch and escalates to an error after
+    # guard_max_skips consecutive skips)
+    guard_anomalies: bool = True
+    guard_max_skips: int = 3
 
     def derived_micro_batch(self, dp_world: int) -> int:
         if self.micro_batch_per_gpu:
@@ -246,6 +256,13 @@ class EngineConfig:
             raise ValueError(
                 f"ckpt_max_in_flight must be >= 1: "
                 f"{self.ckpt_max_in_flight}")
+        if self.ckpt_keep_last < 0:
+            raise ValueError(
+                f"ckpt_keep_last must be >= 0 (0 = keep all): "
+                f"{self.ckpt_keep_last}")
+        if self.guard_max_skips < 1:
+            raise ValueError(
+                f"guard_max_skips must be >= 1: {self.guard_max_skips}")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

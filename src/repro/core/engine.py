@@ -219,26 +219,36 @@ class DistributedEngine:
         return save_checkpoint(ckpt_dir, int(jax.device_get(state.step)),
                                state)
 
-    def restore_state(self, ckpt_dir: str,
-                      step: Optional[int] = None) -> TrainState:
+    def restore_state(self, ckpt_dir: str, step: Optional[int] = None
+                      ) -> TrainState:
         """Elastic restore: reassemble logical arrays from the shard index
         maps and reshard into THIS engine's layout — the source run may
-        have used any dp×pp×ZeRO layout."""
-        from repro.checkpoint import latest_step, restore_checkpoint
+        have used any dp×pp×ZeRO layout.
+
+        With ``step=None`` the newest VALID checkpoint is restored:
+        every candidate is checksum-verified first and a torn/corrupt
+        step falls back to the previous one (the auto-resume contract —
+        a preempted run must never be wedged by its own torn last
+        write). An explicit ``step`` restores exactly that step, with
+        verification errors propagating."""
+        from repro.checkpoint import restore_checkpoint, \
+            restore_latest_valid
         if step is None:
-            step = latest_step(ckpt_dir)
-            if step < 0:
-                raise FileNotFoundError(
-                    f"no checkpoint step_* directories in {ckpt_dir!r}")
+            state, _ = restore_latest_valid(
+                ckpt_dir, self.abstract_state(),
+                shardings=self.state_shardings())
+            return state
         return restore_checkpoint(ckpt_dir, step, self.abstract_state(),
                                   shardings=self.state_shardings())
 
     def make_checkpointer(self):
         """Async double-buffered checkpointer configured from EngineConfig
-        (bounded in-flight saves; cadence is the caller's ``ckpt_every``)."""
+        (bounded in-flight saves + retention GC; cadence is the caller's
+        ``ckpt_every``)."""
         from repro.checkpoint import AsyncCheckpointer
         return AsyncCheckpointer(
-            max_in_flight=self.ecfg.ckpt_max_in_flight)
+            max_in_flight=self.ecfg.ckpt_max_in_flight,
+            keep_last_k=self.ecfg.ckpt_keep_last)
 
     # ------------------------------------------------------------------
     # train step
@@ -292,8 +302,27 @@ class DistributedEngine:
         metrics = dict(metrics)
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr
+        new_step = state.step + 1
+        if self.ecfg.guard_anomalies:
+            # anomaly guard (resilience): a non-finite loss or global
+            # grad-norm means the candidate update is garbage — select
+            # the INPUT params/opt/step instead, so the step is a pure
+            # no-op on the TrainState (cursor/rng semantics untouched;
+            # the host loop sees step_ok == 0, retries the same cursor
+            # batch, and escalates after guard_max_skips skips). The
+            # select is exact when ok: guard on/off trajectories are
+            # bitwise identical on healthy steps.
+            ok = jnp.isfinite(metrics["loss"]) & jnp.isfinite(gnorm)
+
+            def sel(new, ref):
+                return jax.tree.map(lambda a, b: jnp.where(ok, a, b),
+                                    new, ref)
+            new_params = sel(new_params, params)
+            new_opt = sel(new_opt, opt_state)
+            new_step = jnp.where(ok, new_step, state.step)
+            metrics["step_ok"] = ok.astype(jnp.int32)
         new_state = state.replace(params=new_params, opt_state=new_opt,
-                                  step=state.step + 1)
+                                  step=new_step)
         return new_state, metrics
 
     def _pipeline_grads(self, compute_params, batch, gspecs):

@@ -27,6 +27,15 @@ import numpy as np
 
 from repro.data.synthetic import DatasetSpec, make_image_batch, \
     make_token_batch
+from repro.resilience import faults as _faults
+from repro.resilience.backoff import BackoffPolicy
+
+# prefetch-side retry of transient data-source errors: a flaky read
+# (network blip, contended disk) resolves behind the prefetch overlap —
+# the consumer only ever sees persistent failures
+DEFAULT_DATA_BACKOFF = BackoffPolicy(max_attempts=3, base_delay=0.05,
+                                     multiplier=2.0, max_delay=0.5,
+                                     jitter=0.5)
 
 
 def batch_seed(seed: int, epoch: int, i: int) -> int:
@@ -77,6 +86,7 @@ class DataPipeline:
             raise IndexError(
                 f"batch_index {index} out of range for epoch of "
                 f"{self.steps_per_epoch} steps")
+        _faults.check("data", index)    # chaos harness (no-op in prod)
         seed = batch_seed(self.seed, epoch, index)
         if self.kind == "image":
             if self.source is not None:
@@ -111,11 +121,15 @@ class DataPipeline:
             yield self.batch_at(epoch, i)
 
     def prefetch(self, epoch: int = 0, index: int = 0, *, shardings=None,
-                 depth: int = 1) -> "Prefetcher":
+                 depth: int = 1,
+                 retry: Optional[BackoffPolicy] = DEFAULT_DATA_BACKOFF
+                 ) -> "Prefetcher":
         """Background prefetcher starting at cursor ``(epoch, index)``
-        (e.g. a restored TrainState's cursor), rolling epochs forever."""
+        (e.g. a restored TrainState's cursor), rolling epochs forever.
+        Transient source errors are retried per ``retry`` before anything
+        reaches the consumer (None = no retry)."""
         return Prefetcher(self, epoch, index, shardings=shardings,
-                          depth=depth)
+                          depth=depth, retry=retry)
 
     def device_put(self, batch, shardings=None):
         if shardings is None:
@@ -143,8 +157,12 @@ class Prefetcher:
     step consuming this batch must record as the TrainState data cursor.
 
     Iterate forever (epochs roll automatically); ``close()`` (or the
-    context manager) stops the thread. Synthesis errors re-raise on the
-    consumer side.
+    context manager) stops the thread. TRANSIENT synthesis errors
+    (``OSError``, incl. the fault harness's ``TransientError``) are
+    retried in the producer with bounded jittered backoff — the retry
+    sleeps are stop-aware, so ``close()`` is never blocked by a retry in
+    progress; only persistent errors (or exhausted retries) re-raise on
+    the consumer side.
 
     Lifecycle guarantees (regression-tested in test_data_pipeline.py):
     every queue interaction on the producer side is **stop-aware** — in
@@ -159,7 +177,8 @@ class Prefetcher:
     """
 
     def __init__(self, pipe: DataPipeline, epoch: int = 0, index: int = 0,
-                 *, shardings=None, depth: int = 1):
+                 *, shardings=None, depth: int = 1,
+                 retry: Optional[BackoffPolicy] = DEFAULT_DATA_BACKOFF):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1: {depth}")
         self._pipe = pipe
@@ -174,7 +193,7 @@ class Prefetcher:
         self._thread = threading.Thread(
             target=_prefetch_loop,
             args=(weakref.ref(self), pipe, self._q, self._stop, shardings,
-                  int(epoch), int(index)),
+                  int(epoch), int(index), retry),
             name="data-prefetch", daemon=True)
         self._thread.start()
 
@@ -244,12 +263,24 @@ def _stop_aware_put(q: queue.Queue, stop: threading.Event, msg) -> bool:
 
 def _prefetch_loop(ref, pipe: DataPipeline, q: queue.Queue,
                    stop: threading.Event, shardings, epoch: int,
-                   index: int):
+                   index: int, retry: Optional[BackoffPolicy]):
     """Producer body (module-level — see Prefetcher.__init__ on why it
-    only weakly references its owner)."""
+    only weakly references its owner). ``retry`` bounds the transient-
+    error retries of the source fetch; the backoff sleeps wait on the
+    stop event, so a close() during a retry returns immediately."""
+    def fetch(e, i):
+        if retry is None:
+            return pipe.batch_at(e, i)
+        return retry.retry(
+            lambda: pipe.batch_at(e, i), retryable=(OSError,),
+            sleep=lambda d: stop.wait(d),
+            on_retry=lambda a, d, exc: print(
+                f"[data] transient source error at ({e}, {i}) attempt "
+                f"{a + 1} ({exc}); retrying in {d:.2f}s", flush=True))
+
     try:
         while not stop.is_set():
-            batch = pipe.batch_at(epoch, index)
+            batch = fetch(epoch, index)
             batch = pipe.device_put(batch, shardings)
             item = ((epoch, index), batch, pipe.next_cursor(epoch, index))
             if not _stop_aware_put(q, stop, ("ok", item)):

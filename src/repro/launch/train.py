@@ -48,6 +48,23 @@ exact augmentation stream); ``--label-smoothing`` smooths the train CE.
 every N steps and at exit: integer top-1/top-5 correct counts (exactly
 layout-invariant) + NLL, mask-padded over the non-divisible final batch,
 appended to the metrics history as eval_* rows.
+
+Fault tolerance (repro.resilience): ``--supervise`` wraps the whole run in
+an auto-resume supervisor — the training command runs as a child process
+(fresh JAX runtime per attempt) that is relaunched with ``--resume`` from
+the newest valid checkpoint after a restartable failure (preemption exit,
+crash), up to ``--max-restarts`` times with jittered exponential backoff.
+SIGTERM/SIGINT trigger a one-shot emergency checkpoint and a restartable
+exit (code 75). The in-jit anomaly guard (on by default; ``--no-guard``
+disables) skips any optimizer update whose loss or global grad-norm is
+non-finite — params/opt/step stay bitwise unchanged, the SAME cursor
+batch is retried, and the run aborts after ``--guard-max-skips``
+consecutive skips. ``--keep-last K`` turns on retention GC (never deletes
+the newest checkpoint that passes checksum verification).
+``--inject-faults "nan_grad@3,ckpt_write@4:transient:2,preempt@rand"``
+(or ``seeded``) installs a deterministic chaos schedule — see
+resilience/faults.py; fired faults land in ``<ckpt-dir>/faults.jsonl`` so
+a supervised relaunch doesn't replay them.
 """
 from __future__ import annotations
 
@@ -137,7 +154,38 @@ def main():
                     help="synchronous host data path (bench baseline)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
+    # --- resilience ---------------------------------------------------
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the auto-resume supervisor: child "
+                         "process per attempt, relaunched with --resume "
+                         "from the newest valid checkpoint after "
+                         "restartable failures")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="supervisor restart budget")
+    ap.add_argument("--inject-faults", default="",
+                    help="chaos schedule: 'kind@step[:mode[:count]],...' "
+                         "(kinds: nan_grad ckpt_write ckpt_corrupt data "
+                         "preempt; '@rand' draws a seeded step) or "
+                         "'seeded' for the default seed-derived schedule")
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="checkpoint retention: keep the newest K "
+                         "(0 = keep all); never deletes the newest "
+                         "checkpoint that passes verification")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="disable the in-jit anomaly guard (non-finite "
+                         "loss/grad-norm then corrupts the params)")
+    ap.add_argument("--guard-max-skips", type=int, default=3,
+                    help="abort after this many consecutive guard-skipped "
+                         "updates of the same batch")
     args = ap.parse_args()
+
+    if args.supervise:
+        # must run BEFORE _maybe_reexec / any jax import: the supervisor
+        # process only forks children and never touches the runtime
+        from repro.resilience.supervisor import child_argv, supervise
+        raise SystemExit(supervise(child_argv(sys.argv[1:]),
+                                   max_restarts=args.max_restarts,
+                                   seed=args.seed))
     _maybe_reexec(args.devices)
 
     import jax
@@ -150,6 +198,22 @@ def main():
     from repro.core.engine import DistributedEngine
     from repro.data import AugmentConfig, DATASETS, DataPipeline, make_source
     from repro.launch.mesh import make_local_mesh
+    from repro.resilience import FaultPlan, RESTARTABLE_EXIT
+    from repro.resilience import faults as _faults
+    from repro.resilience.supervisor import install_preemption_handler
+
+    if args.inject_faults:
+        fault_log = os.path.join(args.ckpt_dir, "faults.jsonl") \
+            if args.ckpt_dir else None
+        if args.inject_faults == "seeded":
+            plan = FaultPlan.seeded(args.seed, max_step=args.steps,
+                                    log_path=fault_log)
+        else:
+            plan = FaultPlan.parse(args.inject_faults, seed=args.seed,
+                                   max_step=args.steps, log_path=fault_log)
+        plan.install()
+        print(f"[faults] installed {plan!r}"
+              + (f" log={fault_log}" if fault_log else ""))
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     if args.use_pallas:
@@ -169,7 +233,9 @@ def main():
         total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
         sequence_parallel=args.seq_parallel, pipeline_stages=args.pp,
         seed=args.seed, ckpt_every=args.ckpt_every,
-        ckpt_async=not args.ckpt_sync)
+        ckpt_async=not args.ckpt_sync, ckpt_keep_last=args.keep_last,
+        guard_anomalies=not args.no_guard,
+        guard_max_skips=args.guard_max_skips)
     aug = AugmentConfig(num_classes=cfg.num_classes) \
         if args.augment and cfg.arch_type == "vit" else None
     eng = DistributedEngine(cfg, ecfg, mesh, aug=aug)
@@ -206,15 +272,24 @@ def main():
         raise SystemExit("[train] --eval-every needs a real dataset "
                          "(--dataset cifar10|cifar100 on a vit arch)")
 
+    state = None
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) >= 0:
-        state = eng.restore_state(
-            args.ckpt_dir,
-            step=args.resume_step if args.resume_step >= 0 else None)
-        print(f"[train] resumed step={int(state.step)} "
-              f"cursor=(epoch {int(state.epoch)}, "
-              f"batch {int(state.batch_index)}) from {args.ckpt_dir}")
-    else:
-        if args.resume:
+        try:
+            state = eng.restore_state(
+                args.ckpt_dir,
+                step=args.resume_step if args.resume_step >= 0 else None)
+            print(f"[train] resumed step={int(state.step)} "
+                  f"cursor=(epoch {int(state.epoch)}, "
+                  f"batch {int(state.batch_index)}) from {args.ckpt_dir}")
+        except FileNotFoundError as e:
+            # every on-disk step failed checksum verification — a fresh
+            # start beats refusing to train (latest-valid fallback for
+            # merely-newest-corrupt already happened inside restore_state)
+            print(f"[train] --resume: no checkpoint survives "
+                  f"verification ({e}); starting fresh")
+    if state is None:
+        if args.resume and \
+                (not args.ckpt_dir or latest_step(args.ckpt_dir) < 0):
             print(f"[train] --resume: no checkpoint in "
                   f"{args.ckpt_dir or '<unset>'}; starting fresh")
         state = eng.init_state(seed=args.seed)
@@ -224,6 +299,7 @@ def main():
 
     step_fn = eng.jit_train_step()
     saver = eng.make_checkpointer() if ecfg.ckpt_async else None
+    preempted = install_preemption_handler()
     hist = []
     t0 = time.time()
 
@@ -274,7 +350,29 @@ def main():
         with mesh:
             for step in range(start_step, end_step):
                 batch, nxt = fetch(step)
-                state, metrics = step_fn(state, batch)
+                # anomaly-guarded step: a non-finite loss/grad-norm makes
+                # the jitted step a bitwise no-op (step_ok=0) — retry the
+                # SAME cursor batch (state.step didn't advance, so the
+                # fold_in rng stream is identical) and escalate after
+                # guard_max_skips consecutive skips. Fault poisoning is
+                # once-only, so the retry sees the clean batch — the loss
+                # trajectory exactly matches an uninterrupted run.
+                skips = 0
+                while True:
+                    fed = _faults.poison_batch(batch, step)
+                    state, metrics = step_fn(state, fed)
+                    if not ecfg.guard_anomalies or \
+                            bool(np.asarray(metrics["step_ok"])):
+                        break
+                    skips += 1
+                    print(f"[guard] step {step}: non-finite loss/grad-"
+                          f"norm — update skipped "
+                          f"({skips}/{ecfg.guard_max_skips})", flush=True)
+                    if skips >= ecfg.guard_max_skips:
+                        raise RuntimeError(
+                            f"anomaly guard: {skips} consecutive skipped "
+                            f"updates at step {step}; aborting "
+                            f"(persistent data/numerics problem)")
                 # roll the data cursor on the host — the jitted step passes
                 # it through; a checkpoint taken now names the NEXT batch
                 state = state.replace(epoch=jnp.int32(nxt[0]),
@@ -295,6 +393,21 @@ def main():
                         save_checkpoint(args.ckpt_dir, step + 1, state)
                 if args.eval_every and (step + 1) % args.eval_every == 0:
                     run_eval(state, step + 1)
+                # planned preemption fires here (SIGTERM to self); real
+                # SIGTERM/SIGINT land in the same flag via the handler
+                _faults.preempt_due(step)
+                if preempted.triggered:
+                    if saver is not None:
+                        saver.wait()    # drain before the emergency save
+                    if args.ckpt_dir:
+                        path = save_checkpoint(args.ckpt_dir,
+                                               int(np.asarray(state.step)),
+                                               state)
+                        print(f"[train] preempted (signal "
+                              f"{preempted.signum}) — emergency "
+                              f"checkpoint -> {path}", flush=True)
+                    # EX_TEMPFAIL: the supervisor relaunches with --resume
+                    raise SystemExit(RESTARTABLE_EXIT)
     finally:
         if prefetcher is not None:
             prefetcher.close()

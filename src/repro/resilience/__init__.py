@@ -1,0 +1,18 @@
+"""Fault tolerance: deterministic fault injection, shared backoff,
+and the auto-resume supervisor (see ROADMAP "Resilience")."""
+from repro.resilience.backoff import (  # noqa: F401
+    BackoffPolicy,
+    TransientError,
+)
+from repro.resilience.faults import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    PermanentFault,
+)
+from repro.resilience.supervisor import (  # noqa: F401
+    RESTARTABLE_EXIT,
+    PreemptionFlag,
+    child_argv,
+    install_preemption_handler,
+    supervise,
+)

@@ -300,3 +300,97 @@ def test_prefetcher_error_after_ok_items_still_propagates():
         with pytest.raises(RuntimeError, match="prefetch thread failed"):
             next(pf)
     assert not pf._thread.is_alive()
+
+
+def test_prefetcher_retries_transient_source_errors():
+    """A flaky source (bounded run of OSError/TransientError) resolves
+    behind the prefetch overlap — the consumer sees only good batches,
+    in cursor order, never the transient failures."""
+    from repro.resilience.backoff import BackoffPolicy, TransientError
+    p = _pipe()
+    orig = p.batch_at
+    fails = {"n": 0}
+
+    def flaky(e, i):
+        if (e, i) == (0, 1) and fails["n"] < 2:
+            fails["n"] += 1
+            raise TransientError("network blip")
+        return orig(e, i)
+
+    p.batch_at = flaky
+    retry = BackoffPolicy(max_attempts=3, base_delay=0.01, max_delay=0.01)
+    with p.prefetch(0, 0, retry=retry) as pf:
+        cursors = [next(pf)[0] for _ in range(3)]
+    assert cursors == [(0, 0), (0, 1), (0, 2)]
+    assert fails["n"] == 2
+
+
+def test_prefetcher_exhausted_retries_propagate():
+    """A PERSISTENT IO failure (outlives the retry budget) must reach
+    the consumer, not spin forever in the producer."""
+    from repro.resilience.backoff import BackoffPolicy, TransientError
+    p = _pipe()
+    calls = {"n": 0}
+
+    def down(e, i):
+        calls["n"] += 1
+        raise TransientError("source is down")
+
+    p.batch_at = down
+    retry = BackoffPolicy(max_attempts=3, base_delay=0.01, max_delay=0.01)
+    with p.prefetch(0, 0, retry=retry) as pf:
+        with pytest.raises(RuntimeError, match="prefetch thread failed"):
+            next(pf)
+    assert calls["n"] == 3              # exactly the retry budget
+
+
+def test_prefetcher_nonretryable_errors_skip_the_retry_loop():
+    """Non-OSError synthesis bugs propagate on the FIRST attempt —
+    retrying a deterministic exception only delays the report."""
+    p = _pipe()
+    calls = {"n": 0}
+
+    def broken(e, i):
+        calls["n"] += 1
+        raise ValueError("synthesis bug")
+
+    p.batch_at = broken
+    with p.prefetch(0, 0) as pf:        # default retry policy active
+        with pytest.raises(RuntimeError, match="prefetch thread failed"):
+            next(pf)
+    assert calls["n"] == 1
+
+
+def test_prefetcher_close_interrupts_backoff_sleep():
+    """Retry sleeps wait on the stop event: close() during a long
+    backoff returns promptly instead of serving out the delay."""
+    from repro.resilience.backoff import BackoffPolicy, TransientError
+    p = _pipe()
+    p.batch_at = lambda e, i: (_ for _ in ()).throw(
+        TransientError("always down"))
+    retry = BackoffPolicy(max_attempts=10, base_delay=30.0, max_delay=30.0)
+    pf = p.prefetch(0, 0, retry=retry)
+    _wait_until(lambda: pf._thread.is_alive())
+    t0 = time.time()
+    pf.close()
+    assert time.time() - t0 < 10        # not a 30s backoff serve-out
+    assert not pf._thread.is_alive()
+
+
+def test_batch_at_data_fault_injection_roundtrip():
+    """The chaos harness's `data` fault rides the same retry path: a
+    transient plan resolves invisibly, a permanent one propagates."""
+    from repro.resilience import FaultPlan, PermanentFault
+    from repro.resilience.backoff import BackoffPolicy
+    retry = BackoffPolicy(max_attempts=3, base_delay=0.01, max_delay=0.01)
+    with FaultPlan.parse("data@1:transient:2"):
+        p = _pipe()
+        with p.prefetch(0, 0, retry=retry) as pf:
+            cursors = [next(pf)[0] for _ in range(3)]
+        assert cursors == [(0, 0), (0, 1), (0, 2)]
+    with FaultPlan.parse("data@0:permanent"):
+        p = _pipe()
+        with p.prefetch(0, 0, retry=retry) as pf:
+            with pytest.raises(RuntimeError,
+                               match="prefetch thread failed"):
+                next(pf)

@@ -1,0 +1,384 @@
+"""Fault-tolerance stack: FaultPlan semantics (deterministic schedules,
+once-only firing across restarts via the fault log), the engine's
+anomaly-guarded step (non-finite loss/grad-norm -> bitwise no-op +
+same-batch retry), hardened checkpoint IO (checksums, retry, fallback
+restore, retention GC that never deletes the last restorable state), the
+auto-resume supervisor, and the end-to-end kill-and-resume chaos run."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    gc_checkpoints,
+    latest_step,
+    latest_valid_step,
+    list_steps,
+    restore_latest_valid,
+    save_checkpoint,
+    verify_checkpoint,
+)
+from repro.configs import EngineConfig, get_smoke_config
+from repro.core.engine import DistributedEngine
+from repro.launch.mesh import make_local_mesh
+from repro.resilience import (
+    FaultPlan,
+    PermanentFault,
+    RESTARTABLE_EXIT,
+    TransientError,
+    child_argv,
+    supervise,
+)
+from repro.resilience.backoff import BackoffPolicy
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_grammar():
+    p = FaultPlan.parse("nan_grad@3,ckpt_write@4:transient:5,"
+                        "data@2:permanent,sigterm@7")
+    kinds = {(f.kind, f.step, f.mode) for f in p.faults}
+    assert kinds == {("nan_grad", 3, "transient"),
+                     ("ckpt_write", 4, "transient"),
+                     ("data", 2, "permanent"),
+                     ("preempt", 7, "transient")}   # alias resolved
+    assert next(f for f in p.faults if f.kind == "ckpt_write").count == 5
+
+
+def test_fault_plan_parse_rejects_garbage():
+    with pytest.raises(ValueError, match="kind@step"):
+        FaultPlan.parse("nan_grad")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("frobnicate@3")
+    with pytest.raises(ValueError, match="@rand"):
+        FaultPlan.parse("nan_grad@rand")        # no max_step
+
+
+def test_fault_plan_rand_and_seeded_are_deterministic():
+    a = FaultPlan.parse("nan@rand,preempt@rand", seed=11, max_step=100)
+    b = FaultPlan.parse("nan@rand,preempt@rand", seed=11, max_step=100)
+    c = FaultPlan.parse("nan@rand,preempt@rand", seed=12, max_step=100)
+    steps = lambda p: [f.step for f in p.faults]
+    assert steps(a) == steps(b)
+    assert steps(a) != steps(c)
+    assert steps(FaultPlan.seeded(5, 50)) == steps(FaultPlan.seeded(5, 50))
+    assert all(1 <= s < 50 for s in steps(FaultPlan.seeded(5, 50)))
+
+
+def test_fault_check_transient_resolves_permanent_does_not():
+    p = FaultPlan.parse("ckpt_write@3:transient:2,data@4:permanent")
+    for _ in range(2):
+        with pytest.raises(TransientError):
+            p.check("ckpt_write", 3)
+    p.check("ckpt_write", 3)                    # resolved after `count`
+    for _ in range(3):                          # permanent never resolves
+        with pytest.raises(PermanentFault):
+            p.check("data", 4)
+    p.check("data", 99)                         # wrong step: no-op
+
+
+def test_poison_batch_fires_once():
+    p = FaultPlan.parse("nan_grad@2")
+    batch = {"images": np.ones((2, 2), np.float32),
+             "labels": np.arange(2, dtype=np.int32)}
+    fed = p.poison_batch(batch, 2)
+    assert np.isnan(fed["images"]).all()
+    assert fed["labels"].dtype == np.int32      # ints untouched
+    again = p.poison_batch(batch, 2)            # once-only: clean again
+    assert np.isfinite(np.asarray(again["images"])).all()
+
+
+def test_fault_log_marks_fired_faults_consumed(tmp_path):
+    """The once-only-across-restarts contract: a relaunched run that
+    re-executes the fault step must not replay the fault."""
+    log = str(tmp_path / "faults.jsonl")
+    p1 = FaultPlan.parse("nan_grad@2,preempt@5", log_path=log)
+    p1.poison_batch({"x": np.ones(2, np.float32)}, 2)
+    recs = [json.loads(l) for l in open(log)]
+    assert [r["kind"] for r in recs] == ["nan_grad"]
+    p2 = FaultPlan.parse("nan_grad@2,preempt@5", log_path=log)
+    nan = next(f for f in p2.faults if f.kind == "nan_grad")
+    pre = next(f for f in p2.faults if f.kind == "preempt")
+    assert nan.exhausted and not pre.exhausted
+    clean = p2.poison_batch({"x": np.ones(2, np.float32)}, 2)
+    assert np.isfinite(clean["x"]).all()
+
+
+def test_install_shims_are_noops_without_plan():
+    from repro.resilience import faults
+    assert faults.active() is None
+    faults.check("data", 3)                     # no plan: must not raise
+    b = {"x": np.ones(1, np.float32)}
+    assert faults.poison_batch(b, 3) is b
+    with FaultPlan.parse("data@3:permanent") as plan:
+        assert faults.active() is plan
+        with pytest.raises(PermanentFault):
+            faults.check("data", 3)
+    assert faults.active() is None              # context-managed uninstall
+
+
+# ---------------------------------------------------------------------------
+# anomaly-guarded engine step
+# ---------------------------------------------------------------------------
+
+def _guard_engine(guard=True):
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+    ecfg = EngineConfig(train_batch_size=4, total_steps=10, warmup_steps=1,
+                        guard_anomalies=guard)
+    return cfg, DistributedEngine(cfg, ecfg, make_local_mesh())
+
+
+def _image_batch(cfg, nan=False):
+    rng = np.random.default_rng(0)
+    img = rng.normal(0, 1, (4, cfg.image_size, cfg.image_size, 3))
+    img = img.astype(np.float32) * (float("nan") if nan else 1.0)
+    return {"images": img, "labels": np.arange(4, dtype=np.int32) % 10}
+
+
+def test_guard_skips_nan_step_bitwise_and_retry_advances():
+    cfg, eng = _guard_engine()
+    state = eng.init_state(seed=0)
+    step = eng.jit_train_step(donate=False)
+    with eng.mesh:
+        s1, m1 = step(state, _image_batch(cfg, nan=True))
+        assert int(m1["step_ok"]) == 0
+        assert int(s1.step) == int(state.step)  # step did not advance
+        for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                        jax.tree_util.tree_leaves(s1.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        s2, m2 = step(s1, _image_batch(cfg))    # same-batch retry, clean
+        assert int(m2["step_ok"]) == 1
+        assert int(s2.step) == int(state.step) + 1
+        assert np.isfinite(float(m2["loss"]))
+
+
+def test_guard_off_has_no_step_ok_metric():
+    cfg, eng = _guard_engine(guard=False)
+    state = eng.init_state(seed=0)
+    step = eng.jit_train_step(donate=False)
+    with eng.mesh:
+        _, m = step(state, _image_batch(cfg))
+        assert "step_ok" not in m
+
+
+# ---------------------------------------------------------------------------
+# hardened checkpoint IO
+# ---------------------------------------------------------------------------
+
+def _tree(v):
+    return {"w": jnp.full((16, 8), float(v)), "step": jnp.int32(v)}
+
+
+def _corrupt(ckpt_dir, step):
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    shard = next(n for n in sorted(os.listdir(d))
+                 if n.startswith("shards-"))
+    with open(os.path.join(d, shard), "r+b") as f:
+        f.seek(os.path.getsize(os.path.join(d, shard)) // 2)
+        f.write(b"\xde\xad\xbe\xef" * 4)
+
+
+def test_verify_detects_corruption(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree(1))
+    verify_checkpoint(str(tmp_path), 1)         # sound
+    _corrupt(str(tmp_path), 1)
+    with pytest.raises(CheckpointCorruptError):
+        verify_checkpoint(str(tmp_path), 1)
+
+
+def test_restore_falls_back_past_corrupt_latest(tmp_path):
+    for s in (1, 2, 3):
+        save_checkpoint(str(tmp_path), s, _tree(s))
+    _corrupt(str(tmp_path), 3)
+    assert latest_step(str(tmp_path)) == 3      # still *listed*
+    assert latest_valid_step(str(tmp_path)) == 2
+    tree, step = restore_latest_valid(str(tmp_path), _tree(0))
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.full((16, 8), 2.0))
+
+
+def test_restore_latest_valid_raises_when_all_corrupt(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree(1))
+    _corrupt(str(tmp_path), 1)
+    with pytest.raises(FileNotFoundError, match="all failed verification"):
+        restore_latest_valid(str(tmp_path), _tree(0))
+
+
+def test_list_steps_skips_tmp_and_manifestless(tmp_path):
+    save_checkpoint(str(tmp_path), 5, _tree(5))
+    os.makedirs(tmp_path / "step_00000007.tmp")     # torn staging
+    os.makedirs(tmp_path / "step_00000008")         # manifest-less
+    (tmp_path / "step_00000008" / "shards-p00.npz").write_bytes(b"junk")
+    assert list_steps(str(tmp_path)) == [5]
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_save_retries_transient_write_faults(tmp_path):
+    """An injected transient ckpt_write fault is absorbed by the IO
+    retry — the save lands and verifies."""
+    retry = BackoffPolicy(max_attempts=4, base_delay=0.01, max_delay=0.01)
+    with FaultPlan.parse("ckpt_write@1:transient:2"):
+        save_checkpoint(str(tmp_path), 1, _tree(1), retry=retry)
+    verify_checkpoint(str(tmp_path), 1)
+
+
+def test_save_gives_up_on_permanent_write_fault(tmp_path):
+    retry = BackoffPolicy(max_attempts=3, base_delay=0.01, max_delay=0.01)
+    with FaultPlan.parse("ckpt_write@1:permanent"):
+        with pytest.raises(PermanentFault):
+            save_checkpoint(str(tmp_path), 1, _tree(1), retry=retry)
+    assert list_steps(str(tmp_path)) == []
+
+
+def test_gc_keeps_last_k(tmp_path):
+    for s in range(1, 6):
+        save_checkpoint(str(tmp_path), s, _tree(s))
+    deleted = gc_checkpoints(str(tmp_path), 2)
+    assert deleted == [1, 2, 3]
+    assert list_steps(str(tmp_path)) == [4, 5]
+
+
+def test_gc_never_deletes_last_valid_checkpoint(tmp_path):
+    """Retention must not destroy the only restorable state: when every
+    step inside the window is corrupt, the newest VALID step survives."""
+    for s in (1, 2, 3):
+        save_checkpoint(str(tmp_path), s, _tree(s))
+    _corrupt(str(tmp_path), 2)
+    _corrupt(str(tmp_path), 3)
+    deleted = gc_checkpoints(str(tmp_path), 2)
+    assert 1 not in deleted
+    assert set(list_steps(str(tmp_path))) == {1, 2, 3}  # nothing deletable
+    tree, step = restore_latest_valid(str(tmp_path), _tree(0))
+    assert step == 1
+
+
+def test_save_checkpoint_keep_last_k_inline_gc(tmp_path):
+    for s in range(1, 5):
+        save_checkpoint(str(tmp_path), s, _tree(s), keep_last_k=2)
+    assert list_steps(str(tmp_path)) == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+
+class _FakeProc:
+    def __init__(self, rc):
+        self._rc = rc
+
+    def wait(self):
+        return self._rc
+
+    def poll(self):
+        return self._rc
+
+    def send_signal(self, sig):
+        pass
+
+
+def _fake_popen(rcs, launched):
+    it = iter(rcs)
+
+    def popen(cmd):
+        launched.append(list(cmd))
+        return _FakeProc(next(it))
+    return popen
+
+
+def test_supervise_restarts_until_success():
+    launched, slept = [], []
+    rc = supervise(["train"], max_restarts=3,
+                   backoff=BackoffPolicy(max_attempts=8, base_delay=0.01,
+                                         max_delay=0.01),
+                   seed=0, sleep=slept.append,
+                   popen=_fake_popen([RESTARTABLE_EXIT, 1, 0], launched),
+                   log=lambda m: None)
+    assert rc == 0
+    assert len(launched) == 3 and len(slept) == 2
+
+
+def test_supervise_exhausts_restart_budget():
+    launched = []
+    rc = supervise(["train"], max_restarts=2,
+                   backoff=BackoffPolicy(max_attempts=8, base_delay=0.01,
+                                         max_delay=0.01),
+                   seed=0, sleep=lambda d: None,
+                   popen=_fake_popen([1, 1, 1, 1], launched),
+                   log=lambda m: None)
+    assert rc == 1 and len(launched) == 3       # initial + 2 restarts
+
+
+def test_supervise_zero_restarts_passes_through():
+    rc = supervise(["train"], max_restarts=0, sleep=lambda d: None,
+                   popen=_fake_popen([RESTARTABLE_EXIT], []),
+                   log=lambda m: None)
+    assert rc == RESTARTABLE_EXIT
+
+
+def test_child_argv_strips_supervision_flags_and_adds_resume():
+    argv = ["--steps", "6", "--supervise", "--max-restarts", "2",
+            "--ckpt-dir", "/tmp/x"]
+    cmd = child_argv(argv)
+    assert cmd[:3] == [sys.executable, "-m", "repro.launch.train"]
+    tail = cmd[3:]
+    assert "--supervise" not in tail and "--max-restarts" not in tail
+    assert "2" not in tail                      # the flag VALUE went too
+    assert tail.count("--resume") == 1
+    # idempotent: an already-resuming child argv gains nothing
+    assert child_argv(tail).count("--resume") == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: supervised chaos run matches the uninterrupted trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_supervised_chaos_run_matches_baseline(tmp_path):
+    """The acceptance invariant: NaN-grad + corrupt-checkpoint + SIGTERM
+    mid-run, under the supervisor, auto-resumes and reproduces the
+    uninterrupted run's losses to <= 1e-5 on every step both executed."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    common = [sys.executable, "-m", "repro.launch.train", "--arch",
+              "vit-b16", "--smoke", "--steps", "6", "--batch", "8",
+              "--devices", "2", "--dtype", "float32", "--log-every", "1"]
+
+    base_out = tmp_path / "base.json"
+    r = subprocess.run(common + ["--metrics-out", str(base_out)],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    ck = tmp_path / "ck"
+    chaos_out = tmp_path / "chaos.json"
+    r = subprocess.run(
+        common + ["--ckpt-dir", str(ck), "--ckpt-every", "2",
+                  "--ckpt-sync", "--keep-last", "3", "--supervise",
+                  "--max-restarts", "2", "--inject-faults",
+                  "nan_grad@1,ckpt_corrupt@2,preempt@3",
+                  "--metrics-out", str(chaos_out)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "launch attempt 2/3" in r.stdout     # it DID restart
+    assert "update skipped" in r.stdout         # the guard DID trip
+
+    base = {m["step"]: m["loss"] for m in json.load(open(base_out))
+            if "loss" in m}
+    chaos = {m["step"]: m["loss"] for m in json.load(open(chaos_out))
+             if "loss" in m}
+    common_steps = sorted(set(base) & set(chaos))
+    assert common_steps, (base, chaos)
+    for s in common_steps:
+        assert abs(base[s] - chaos[s]) <= 1e-5, (s, base[s], chaos[s])
+
+    recs = [json.loads(l) for l in open(ck / "faults.jsonl")]
+    assert {r["kind"] for r in recs} == {"nan_grad", "ckpt_corrupt",
+                                         "preempt"}

@@ -84,6 +84,41 @@ def test_async_checkpointer_surfaces_write_errors(tmp_path):
         ckpt.wait()
 
 
+def test_async_checkpointer_fails_fast_on_next_save(tmp_path):
+    """After a background failure the NEXT save must refuse immediately —
+    a run must not keep training for another ckpt_every interval on top
+    of a save path that is already broken."""
+    ckpt = AsyncCheckpointer()
+    (tmp_path / "step_00000001.tmp").write_text("in the way")
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(())})
+    for t in ckpt._pending:             # let the failure land
+        t.join()
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        ckpt.save(str(tmp_path), 2, {"a": jnp.zeros(())})
+    ckpt.close()                        # drains without raising
+
+
+def test_async_checkpointer_close_logs_instead_of_raising(tmp_path,
+                                                          capsys):
+    """close()/__exit__-on-exception/__del__ must never RAISE a stored
+    background failure (it would mask the in-flight exception) — but
+    must never silently swallow it either: it is printed."""
+    ckpt = AsyncCheckpointer()
+    (tmp_path / "step_00000001.tmp").write_text("in the way")
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(())})
+    ckpt.close()                        # no raise
+    out = capsys.readouterr().out
+    assert "async checkpoint save failed" in out
+    ckpt.wait()                         # close() cleared the error
+    # __exit__ on an exceptional path takes the close() branch
+    with pytest.raises(KeyError):
+        with AsyncCheckpointer() as c2:
+            (tmp_path / "step_00000002.tmp").write_text("in the way")
+            c2.save(str(tmp_path), 2, {"a": jnp.zeros(())})
+            raise KeyError("unrelated failure already in flight")
+    assert "async checkpoint save failed" in capsys.readouterr().out
+
+
 def test_data_determinism_and_structure():
     spec = DATASETS["cifar10"]
     b1 = make_image_batch(spec, 8, seed=3)
