@@ -1,7 +1,9 @@
 """Data & evaluation suite: the real-image workload as a tracked artifact
 (``BENCH_data.json``) — samples/sec of the procedural-CIFAR ViT smoke
 workload per dp x pp layout, augmentation on/off, the host-prefetch x
-augmentation interaction, and sharded-eval throughput.
+augmentation interaction, sharded-eval throughput, the uint8-vs-fp32
+host-path comparison (``uint8_on/off``), and prefetch pipeline depth
+(``prefetch_depth``).
 
 Same shape as the scaling suite: each measurement runs in a subprocess
 (host device count is fixed at jax init) and prints one JSON line the
@@ -42,8 +44,8 @@ mesh = make_local_mesh(model=1, pipe=pp)
 ecfg = EngineConfig(train_batch_size=batch, gradient_accumulation_steps=accum,
                     total_steps=100, warmup_steps=1, pipeline_stages=pp)
 aug = AugmentConfig(num_classes=cfg.num_classes) if aug_on else None
-eng = DistributedEngine(cfg, ecfg, mesh, aug=aug)
 source = CIFARSource("cifar10", seed=0)
+eng = DistributedEngine(cfg, ecfg, mesh, aug=aug, preproc=source.preproc)
 pipe = DataPipeline(kind="image", global_batch=batch, source=source)
 state = eng.init_state(seed=0)
 step = eng.jit_train_step(donate=False)
@@ -76,8 +78,8 @@ batch, eval_size = int(sys.argv[1]), int(sys.argv[2])
 cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
 mesh = make_local_mesh()
 ecfg = EngineConfig(train_batch_size=batch, total_steps=100, warmup_steps=1)
-eng = DistributedEngine(cfg, ecfg, mesh)
 source = CIFARSource("cifar10", seed=0, eval_size=eval_size)
+eng = DistributedEngine(cfg, ecfg, mesh, preproc=source.preproc)
 state = eng.init_state(seed=0)
 eval_fn = eng.jit_eval_step()
 eng.evaluate(state, source.eval_batches(batch), eval_step=eval_fn)  # warmup
@@ -112,8 +114,9 @@ for aug_name, aug_on in (("augoff", 0), ("augon", 1)):
     ecfg = EngineConfig(train_batch_size=batch, total_steps=100,
                         warmup_steps=1)
     aug = AugmentConfig(num_classes=cfg.num_classes) if aug_on else None
-    eng = DistributedEngine(cfg, ecfg, mesh, aug=aug)
     source = CIFARSource("cifar10", seed=0)
+    eng = DistributedEngine(cfg, ecfg, mesh, aug=aug,
+                            preproc=source.preproc)
     pipe = DataPipeline(kind="image", global_batch=batch, source=source)
     state = eng.init_state(seed=0)
     step = eng.jit_train_step(donate=False)
@@ -129,7 +132,9 @@ for aug_name, aug_on in (("augoff", 0), ("augon", 1)):
 
     def run_prefetch():
         s = state
-        with pipe.prefetch(0, 0, shardings=bshard) as pf:
+        # depth pinned to 1: this row is the legacy one-deep baseline the
+        # prefetch_depth rows are measured against
+        with pipe.prefetch(0, 0, shardings=bshard, depth=1) as pf:
             for _ in range(steps):
                 _, b, _ = next(pf)
                 s, m = step(s, b)
@@ -141,6 +146,90 @@ for aug_name, aug_on in (("augoff", 0), ("augon", 1)):
             t0 = time.time()
             jax.block_until_ready(fn()["loss"])
             out[f"{pf_name}_{aug_name}"] = (time.time() - t0) / steps * 1e6
+print("DATA_JSON " + json.dumps(out))
+"""
+
+
+# uint8 host path vs the old fp32 host path, END TO END ON THE HOST SIDE:
+# both paths start from the same uint8 source batch and end with a
+# normalized fp32 model-resolution tensor on device. "off" is the legacy
+# path (host normalize -> host upsample -> fp32 device_put); "on" is the
+# timm-PrefetchLoader path (uint8 device_put -> jitted on-device
+# upsample+normalize). 4x fewer transferred bytes and no host fp32
+# materialization — the samples/sec ratio is the tentpole's win.
+_UINT8_CHILD = r"""
+import json, sys, time
+import jax
+from repro.data.augment import device_preprocess
+from repro.data.datasets import CIFARSource, _upsample, normalize_images
+
+batch, res, steps = (int(a) for a in sys.argv[1:4])
+source = CIFARSource("cifar10", seed=0, resolution=res)
+pre = source.preproc
+
+@jax.jit
+def finish(b):
+    return device_preprocess(b, pre, res)["images"]
+
+def path_uint8(seed):
+    b = source.train_batch(batch, seed=seed)
+    return finish({k: jax.device_put(v) for k, v in b.items()})
+
+def path_fp32(seed):
+    b = source.train_batch(batch, seed=seed)
+    img = _upsample(normalize_images(b["images"], pre.mean, pre.std), res)
+    return jax.device_put(img)
+
+out = {}
+for name, fn in (("uint8_off", path_fp32), ("uint8_on", path_uint8)):
+    jax.block_until_ready(fn(0))    # warmup (compile; allocator touch)
+    t0 = time.time()
+    for s in range(1, steps + 1):
+        x = fn(s)
+    jax.block_until_ready(x)
+    dt = (time.time() - t0) / steps
+    out[name] = {"us": dt * 1e6, "samples_per_sec": batch / dt}
+print("DATA_JSON " + json.dumps(out))
+"""
+
+# prefetch pipeline depth on the real train step: depth=1 is the old
+# one-deep behavior (queue of 1 per stage), deeper pipelines overlap
+# synthesis, device_put, and the running step
+_DEPTH_CHILD = r"""
+import json, sys, time
+import jax
+from repro.configs import get_smoke_config, EngineConfig
+from repro.core import sharding as shd
+from repro.core.engine import DistributedEngine
+from repro.data import CIFARSource, DataPipeline
+from repro.launch.mesh import make_local_mesh
+
+batch, steps = int(sys.argv[1]), int(sys.argv[2])
+cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+mesh = make_local_mesh()
+ecfg = EngineConfig(train_batch_size=batch, total_steps=100, warmup_steps=1)
+source = CIFARSource("cifar10", seed=0)
+eng = DistributedEngine(cfg, ecfg, mesh, preproc=source.preproc)
+pipe = DataPipeline(kind="image", global_batch=batch, source=source)
+state = eng.init_state(seed=0)
+step = eng.jit_train_step(donate=False)
+bshard = shd.named(mesh, shd.batch_specs(cfg, pipe.batch_shapes(), mesh))
+
+def run(depth):
+    s = state
+    with pipe.prefetch(0, 0, shardings=bshard, depth=depth) as pf:
+        for _ in range(steps):
+            _, b, _ = next(pf)
+            s, m = step(s, b)
+    return m
+
+out = {}
+with mesh:
+    for depth in (1, 2, 4):
+        run(depth)  # warmup (compile + thread spin-up)
+        t0 = time.time()
+        jax.block_until_ready(run(depth)["loss"])
+        out[str(depth)] = (time.time() - t0) / steps * 1e6
 print("DATA_JSON " + json.dumps(out))
 """
 
@@ -199,4 +288,36 @@ def bench_prefetch_aug(rows):
                     f"rel_step={on / off:.3f};one-deep background prefetch")
 
 
-ALL = [bench_data_layouts, bench_eval_loop, bench_prefetch_aug]
+def bench_uint8_path(rows):
+    """uint8-to-device vs fp32-on-host data path, batch 256 at 128px (a
+    4x CIFAR upsample — the resolution gap any ViT-on-CIFAR run has):
+    host-path samples/sec, where the acceptance bar is uint8_on >= 1.2x
+    uint8_off."""
+    res = _run_child(_UINT8_CHILD, 256, 128, 8, devices=1)
+    base = res["uint8_off"]["samples_per_sec"]
+    for name in ("uint8_off", "uint8_on"):
+        r = res[name]
+        rel = r["samples_per_sec"] / base
+        what = "fp32 host normalize+upsample then device_put" \
+            if name == "uint8_off" else \
+            "uint8 device_put then jitted on-device upsample+normalize"
+        rows.append(f"data_{name},{r['us']:.2f},"
+                    f"samples_per_sec={r['samples_per_sec']:.2f};"
+                    f"rel_tput={rel:.3f};{what}")
+
+
+def bench_prefetch_depth(rows):
+    """Two-stage prefetch pipeline depth (1/2/4) on the real dp8 train
+    step: depth 1 reproduces the old one-deep behavior; deeper pipelines
+    overlap synthesis, transfer, and compute."""
+    res = _run_child(_DEPTH_CHILD, 256, 6)
+    base = res["1"]
+    for depth in (1, 2, 4):
+        us = res[str(depth)]
+        rows.append(f"data_prefetch_depth{depth},{us:.2f},"
+                    f"rel_step={us / base:.3f};two-stage pipeline, "
+                    f"depth {depth} per stage")
+
+
+ALL = [bench_data_layouts, bench_eval_loop, bench_prefetch_aug,
+       bench_uint8_path, bench_prefetch_depth]

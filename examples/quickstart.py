@@ -30,15 +30,19 @@ def main():
         optimizer="adamw",
         lr=1e-3, total_steps=40, warmup_steps=4,
     )
-    # RandomCrop+Flip+Mixup/CutMix, applied on-device inside the jitted
-    # step (rng-threaded from the TrainState -> resumable stream)
-    aug = AugmentConfig(num_classes=cfg.num_classes)
-    engine = DistributedEngine(cfg, ecfg, mesh, aug=aug)
-
-    # real CIFAR-10 if REPRO_DATA_DIR has it, procedural otherwise
+    # real CIFAR-10 if REPRO_DATA_DIR has it, procedural otherwise; the
+    # source ships uint8 batches — 4x fewer host->device bytes than fp32
     source = CIFARSource("cifar10", data_dir=os.environ.get("REPRO_DATA_DIR"),
                          resolution=cfg.image_size)
     pipe = DataPipeline(kind="image", global_batch=32, source=source)
+
+    # RandomCrop+Flip+Mixup/CutMix, applied on-device inside the jitted
+    # step (rng-threaded from the TrainState -> resumable stream);
+    # preproc=source.preproc is the other half of the uint8 data path:
+    # the jitted step upsamples + normalizes the raw bytes on device
+    aug = AugmentConfig(num_classes=cfg.num_classes)
+    engine = DistributedEngine(cfg, ecfg, mesh, aug=aug,
+                               preproc=source.preproc)
 
     state = engine.init_state(seed=0)          # params+opt+step+cursor+rng
     train_step = engine.jit_train_step(donate=False)

@@ -94,16 +94,37 @@ class TrainState:
 
 class DistributedEngine:
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, mesh,
-                 aug=None):
+                 aug=None, preproc=None):
         """``aug``: optional :class:`repro.data.augment.AugmentConfig` —
         on-device train-time augmentation applied per microbatch inside
         the jitted step, keyed by the TrainState rng convention
         (``fold_in(state.rng, state.step)`` split per microbatch), so a
-        resumed run replays the interrupted run's augmentation stream."""
+        resumed run replays the interrupted run's augmentation stream.
+
+        ``preproc``: optional :class:`repro.data.datasets.Preproc` — the
+        dataset's normalization stats + native grid. Required when the
+        data path ships uint8 batches (every dataset source does): the
+        jitted step then finishes the batch on device — nearest-neighbor
+        upsample to ``cfg.image_size`` and the fused cast-and-normalize
+        (``data/augment.device_preprocess``). Pass
+        ``preproc=source.preproc``. Float batches (the synthetic tensor
+        workload) need none and pass through untouched."""
         self.cfg = cfg
         self.ecfg = ecfg
         self.mesh = mesh
         self.aug = aug.validate() if aug is not None else None
+        self.preproc = preproc
+        if preproc is not None:
+            if cfg.arch_type != "vit":
+                raise ValueError(
+                    f"image preprocessing only applies to vit archs, not "
+                    f"{cfg.arch_type!r}")
+            if cfg.image_size % preproc.native_resolution:
+                raise ValueError(
+                    f"cfg.image_size {cfg.image_size} not an integer "
+                    f"multiple of the dataset's native "
+                    f"{preproc.native_resolution}px grid — the on-device "
+                    f"upsample is nearest-neighbor by integer factors")
         if self.aug is not None and ecfg.pipeline_stages > 1:
             # pipelined_loss is deterministic-only (no per-microbatch rng
             # stream through the AD-through-scan 1F1B schedule)
@@ -254,6 +275,16 @@ class DistributedEngine:
     # train step
     # ------------------------------------------------------------------
 
+    def _preprocess_batch(self, batch):
+        """Device-side completion of a host uint8 batch (upsample to
+        ``cfg.image_size`` + fused cast-and-normalize); identity on float
+        batches. Traced inside the jitted train/eval steps — the
+        model-resolution fp32 image tensor never exists on the host."""
+        if self.preproc is None:
+            return batch
+        from repro.data.augment import device_preprocess
+        return device_preprocess(batch, self.preproc, self.cfg.image_size)
+
     def _train_step(self, state: TrainState, batch):
         params, opt_state = state.params, state.opt_state
         # ZeRO-3 §Perf optimization (cast_params_bf16): convert the f32
@@ -272,9 +303,11 @@ class DistributedEngine:
             # infers layouts from the pipe/dp constraints instead. ZeRO
             # still composes: grads get the same dp-sharded constraint.
             # (No per-microbatch rngs: the AD-through-scan pipeline is
-            # deterministic-only — see pipelined_loss.)
-            grads, metrics = self._pipeline_grads(compute_params, batch,
-                                                  gspecs)
+            # deterministic-only — see pipelined_loss. The uint8 batch is
+            # finished on device HERE, before microbatching: the fp32
+            # upsampled copy lives only inside this jit.)
+            grads, metrics = self._pipeline_grads(
+                compute_params, self._preprocess_batch(batch), gspecs)
         else:
             with shardctx.use(self.hints):
                 # per-step, per-microbatch PRNG streams derived from the
@@ -288,9 +321,17 @@ class DistributedEngine:
                 def mb_loss(p, mb, rng):
                     if self.aug is not None:
                         # on-device crop/flip/Mixup/CutMix — pure in the
-                        # microbatch rng, so the stream is resumable
+                        # microbatch rng, so the stream is resumable;
+                        # uint8 microbatches are upsampled/normalized
+                        # inside (composed with the geometric augs)
                         from repro.data.augment import augment_batch
-                        mb = augment_batch(rng, mb, self.aug)
+                        mb = augment_batch(rng, mb, self.aug,
+                                           preproc=self.preproc,
+                                           resolution=self.cfg.image_size)
+                    else:
+                        # per-MICROBATCH preprocess: only one microbatch's
+                        # upsampled fp32 image tensor is live at a time
+                        mb = self._preprocess_batch(mb)
                     return model.loss_fn(self.cfg, p, mb)
                 grads, metrics = accumulate_gradients(
                     mb_loss, compute_params, batch,
@@ -392,6 +433,7 @@ class DistributedEngine:
         the plain scan-over-L forward just gathers pipe-sharded layer
         params (eval needs no 1F1B schedule)."""
         params = self._compute_params(state.params)
+        batch = self._preprocess_batch(batch)
         with shardctx.use(self.hints):
             logits, _, _ = model.forward(self.cfg, params, batch,
                                          mode="train")

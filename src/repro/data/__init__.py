@@ -5,5 +5,23 @@ from repro.data.synthetic import (  # noqa: F401
     make_token_batch,
 )
 from repro.data.pipeline import DataPipeline, Prefetcher  # noqa: F401
-from repro.data.datasets import CIFARSource, make_source  # noqa: F401
-from repro.data.augment import AugmentConfig, augment_batch  # noqa: F401
+from repro.data.datasets import (  # noqa: F401
+    CIFARSource,
+    Preproc,
+    make_source,
+    normalize_images,
+)
+from repro.data.augment import (  # noqa: F401
+    AugmentConfig,
+    augment_batch,
+    device_preprocess,
+)
+
+
+def __getattr__(name):
+    # streaming is lazy so `python -m repro.data.streaming` (the shard
+    # writer CLI) doesn't trip runpy's found-in-sys.modules warning
+    if name in ("ShardedSource", "write_shards"):
+        from repro.data import streaming
+        return getattr(streaming, name)
+    raise AttributeError(name)

@@ -1,5 +1,6 @@
-"""On-device, jit-able image augmentation: random crop + horizontal flip +
-Mixup/CutMix with soft labels.
+"""On-device, jit-able image preprocessing + augmentation: uint8 upsample
+and normalize, random crop + horizontal flip + Mixup/CutMix with soft
+labels.
 
 The standard ViT-on-CIFAR regularization recipe (pytorch-image-models /
 "Scaling Vision Transformers" conventions), implemented as a pure function
@@ -19,6 +20,15 @@ Everything is branchless (``jnp.where`` over both candidates, no
 ``lam * onehot(y) + (1-lam) * onehot(y[perm])`` (rows sum to 1 and lie in
 the convex hull of the pair — property-tested). With both alphas 0 the
 labels pass through hard, and crop/flip never touch labels at all.
+
+Data arrives **uint8 at the native grid** (the timm-PrefetchLoader host
+path, ``data/datasets.py``): :func:`device_preprocess` / the uint8 branch
+of :func:`augment_batch` finish the batch on device — nearest-neighbor
+upsample to the model resolution, then the fused cast-and-normalize
+``u8 * (1/(255*std)) - mean/std``. The geometric augmentations compose on
+the uint8-ranged images (pad/slice/flip are dtype-agnostic and 4x cheaper
+at 8 bits); normalization happens after them and before Mixup/CutMix,
+which needs linear fp32 pixel space.
 """
 from __future__ import annotations
 
@@ -52,6 +62,57 @@ class AugmentConfig:
         if self.crop_pad < 0:
             raise ValueError(f"crop_pad must be >= 0: {self.crop_pad}")
         return self
+
+
+# ---------------------------------------------------------------------------
+# device-side preprocessing (the other half of the uint8 host data path)
+# ---------------------------------------------------------------------------
+
+def upsample(images, resolution: int):
+    """Nearest-neighbor upsample to the model resolution, on device and
+    dtype-preserving — uint8 images stay uint8 until :func:`normalize`,
+    so the big model-resolution array is only ever fp32 AFTER the cheap
+    8-bit repeat."""
+    native = images.shape[1]
+    if resolution == native:
+        return images
+    if resolution % native:
+        raise ValueError(
+            f"model resolution {resolution} not an integer multiple of "
+            f"the native {native}px grid")
+    k = resolution // native
+    return jnp.repeat(jnp.repeat(images, k, axis=1), k, axis=2)
+
+
+def normalize(images, preproc):
+    """Fused uint8 -> normalized fp32: one multiply-add per pixel,
+    ``x * 1/(255*std) - mean/std`` — algebraically identical to the host
+    reference ``(x/255 - mean) / std`` (datasets.normalize_images), pinned
+    to fp32 tolerance by the parity test."""
+    scale = jnp.asarray([1.0 / (255.0 * s) for s in preproc.std],
+                        jnp.float32)
+    bias = jnp.asarray([-m / s for m, s in zip(preproc.mean, preproc.std)],
+                       jnp.float32)
+    return images.astype(jnp.float32) * scale + bias
+
+
+def device_preprocess(batch: dict, preproc, resolution: int) -> dict:
+    """Finish a host uint8 batch on device: upsample to the model
+    resolution, then cast-and-normalize. A no-op for float batches (the
+    legacy synthetic stream ships pre-normalized fp32); a uint8 batch
+    without a ``preproc`` is a wiring error and raises at trace time."""
+    img = batch.get("images")
+    if img is None or img.dtype != jnp.uint8:
+        return batch
+    if preproc is None:
+        raise ValueError(
+            "got a uint8 image batch but no normalization statistics — "
+            "pass preproc=source.preproc to DistributedEngine (or "
+            "device_preprocess) so the on-device normalize knows the "
+            "dataset's mean/std")
+    out = dict(batch)
+    out["images"] = normalize(upsample(img, resolution), preproc)
+    return out
 
 
 def random_crop(rng, images, pad: int):
@@ -130,18 +191,35 @@ def mix_batch(rng, images, onehot, acfg: AugmentConfig):
             jnp.where(apply, out_labels, onehot))
 
 
-def augment_batch(rng, batch: dict, acfg: AugmentConfig) -> dict:
+def augment_batch(rng, batch: dict, acfg: AugmentConfig, *,
+                  preproc=None, resolution: int = 0) -> dict:
     """Full train-time augmentation of one (micro)batch.
 
-    In: ``{"images": (B,H,W,3), "labels": (B,) int}``. Out: same images
-    shape; labels become soft ``(B, num_classes)`` float32 when mixing is
-    enabled, and stay hard ints otherwise (geometric augs are
-    label-invariant). Pure in ``rng`` — the determinism contract."""
+    In: ``{"images": (B,H,W,3), "labels": (B,) int}``. Out: images at the
+    model resolution, normalized fp32 when the input was uint8; labels
+    become soft ``(B, num_classes)`` float32 when mixing is enabled, and
+    stay hard ints otherwise (geometric augs are label-invariant). Pure in
+    ``rng`` — the determinism contract.
+
+    uint8 inputs (the streaming host path) compose as: on-device upsample
+    (8-bit) -> crop/flip on the uint8-ranged images -> fused
+    cast-and-normalize -> Mixup/CutMix in fp32. ``preproc`` is required
+    then; float inputs take the legacy path (same rng split layout, so
+    augmentation streams are unchanged)."""
     k_crop, k_flip, k_mix = jax.random.split(rng, 3)
     images = batch["images"]
+    was_uint8 = images.dtype == jnp.uint8
+    if was_uint8:
+        if preproc is None:
+            raise ValueError(
+                "augment_batch on a uint8 batch needs preproc= (the "
+                "dataset's mean/std) for the post-crop normalize")
+        images = upsample(images, resolution or images.shape[1])
     images = random_crop(k_crop, images, acfg.crop_pad)
     if acfg.flip:
         images = random_flip(k_flip, images)
+    if was_uint8:
+        images = normalize(images, preproc)
     out = dict(batch)
     out["images"] = images
     if acfg.mixing:

@@ -6,28 +6,47 @@ pipeline established (``batch_at(epoch, index)`` pure in
 ``(seed, epoch, index)``), so the TrainState data cursor and the elastic
 resume path work unchanged on the real workload.
 
+Images are **uint8 end-to-end on the host** (the timm-PrefetchLoader
+idiom): load, store, slice, and transfer all happen at the native 8-bit
+resolution, and normalization (mean/std), the upsample to the model
+resolution, and the fp32 cast all run **on device inside the jitted step**
+(``data/augment.py: device_preprocess``). That cuts host->device bytes 4x
+versus shipping pre-normalized fp32 — at 224px it also keeps the 196x
+larger upsampled fp32 image off the host entirely. Each source exposes a
+:class:`Preproc` carrying the statistics the device-side half needs.
+
 Two backing stores, one interface:
 
 - **Disk** (``data_dir`` given and the binary batches exist): the standard
   python-pickle distributions — ``cifar-10-batches-py/data_batch_{1..5}`` +
   ``test_batch``, or ``cifar-100-python/{train,test}`` — loaded once into
-  host memory, per-channel normalized with the canonical mean/std.
+  host memory as raw uint8 (a 4x smaller resident split than the old
+  pre-normalized fp32 copies).
 - **Procedural** (no ``data_dir``; the CI/test path — never downloads):
   a deterministic CIFAR-*like* generator. Train batches are pure in the
   batch seed (class template + structured noise, same construction as
-  ``data/synthetic.py`` so accuracy trends are learnable); the eval split
-  is a FIXED finite array generated from the source seed alone, so every
-  process/layout sees byte-identical eval data.
+  ``data/synthetic.py`` so accuracy trends are learnable), quantized to
+  uint8 through the inverse of the canonical normalization; the eval split
+  is a FIXED finite uint8 array generated from the source seed alone, so
+  every process/layout sees byte-identical eval data.
 
 Evaluation iterates the test split in order; the final non-divisible batch
 is zero-padded to the full batch shape with a ``mask`` leaf (1 = real
 example) so the jitted eval step sees one static shape and the padding
 contributes nothing to the metric counts.
+
+Weak scaling (the paper's §IV-A protocol): each world size trains on a
+*proportional subset* of the split. ``train_batch(..., pool=p)`` restricts
+the sampled index pool to the first ``p`` examples — ``DataPipeline``
+derives ``p`` from ``weak_scaling_frac``, so shrinking ``epoch_size``
+alone (the old, silently-wrong behavior) no longer stands in for
+restricting the data actually sampled.
 """
 from __future__ import annotations
 
 import os
 import pickle
+from dataclasses import dataclass
 from typing import Iterator, Optional
 
 import numpy as np
@@ -48,6 +67,17 @@ _STATS = {"cifar10": (CIFAR10_MEAN, CIFAR10_STD),
 # that CI materializes the eval split in milliseconds
 PROCEDURAL_TRAIN_SIZE = 4096
 PROCEDURAL_EVAL_SIZE = 500
+
+
+@dataclass(frozen=True)
+class Preproc:
+    """What the device-side half of the data path needs to finish a uint8
+    batch: the normalization statistics and the native pixel grid the
+    uint8 images are stored at. Hashable, so it is jit-safe as a closure
+    constant of the compiled step."""
+    mean: tuple
+    std: tuple
+    native_resolution: int
 
 
 def _pickle_load(path: str) -> dict:
@@ -89,24 +119,72 @@ def _load_split(files, label_key: str):
 
 
 def normalize_images(u8, mean, std):
-    """uint8 HWC -> float32 normalized with per-channel statistics."""
+    """uint8 HWC -> float32 normalized with per-channel statistics. The
+    HOST-side reference implementation: the jitted step applies the same
+    map on device (data/augment.normalize), and the parity test pins the
+    two to fp32 tolerance."""
     x = np.asarray(u8, np.float32) / 255.0
     return (x - np.asarray(mean, np.float32)) \
         / np.asarray(std, np.float32)
 
 
+def quantize_images(x, mean, std):
+    """Inverse of :func:`normalize_images`: normalized-scale fp32 ->
+    uint8. Used to store the procedural splits in the same raw-byte form
+    the disk pickles arrive in (values beyond the representable range
+    clip; the ~1/255 quantization step is below the generator's noise
+    floor, so learnability is unaffected)."""
+    u = (np.asarray(x, np.float32) * np.asarray(std, np.float32)
+         + np.asarray(mean, np.float32)) * 255.0
+    return np.clip(np.rint(u), 0, 255).astype(np.uint8)
+
+
 def _upsample(images: np.ndarray, res: int) -> np.ndarray:
-    """Nearest-neighbor upsample 32px CIFAR to the model resolution (the
-    full ViT-B/16 trains at 224 = 7 x 32)."""
+    """Nearest-neighbor upsample to the model resolution — HOST-side
+    reference only (the hot path upsamples on device; this stays as the
+    oracle the uint8-path parity tests compare against)."""
     native = images.shape[1]
     if res == native:
         return images
     if res % native:
         raise ValueError(
             f"target resolution {res} not an integer multiple of the "
-            f"native {native}px CIFAR grid")
+            f"native {native}px grid")
     k = res // native
     return np.repeat(np.repeat(images, k, axis=1), k, axis=2)
+
+
+def padded_eval_batches(images: np.ndarray, labels: np.ndarray,
+                        batch: int) -> Iterator[dict]:
+    """Iterate a finite eval split in order at one static batch shape:
+    the final non-divisible batch is zero-padded with ``mask`` zeros (the
+    eval step multiplies every per-example indicator by the mask, so
+    padding is metric-invisible). Shared by the in-RAM CIFAR source and
+    the sharded streaming source."""
+    n = len(labels)
+    for lo in range(0, n, batch):
+        hi = min(lo + batch, n)
+        m = hi - lo
+        img = images[lo:hi]
+        lab = labels[lo:hi]
+        mask = np.ones((batch,), np.float32)
+        if m < batch:
+            pad = batch - m
+            img = np.concatenate(
+                [img, np.zeros((pad,) + img.shape[1:], img.dtype)])
+            lab = np.concatenate([lab, np.zeros((pad,), lab.dtype)])
+            mask[m:] = 0.0
+        yield {"images": img, "labels": lab, "mask": mask}
+
+
+def _check_pool(pool: Optional[int], size: int) -> int:
+    if pool is None:
+        return size
+    if not 0 < pool <= size:
+        raise ValueError(
+            f"sample pool {pool} out of range for a split of {size} "
+            f"examples")
+    return pool
 
 
 class CIFARSource:
@@ -115,7 +193,9 @@ class CIFARSource:
     ``train_batch(batch, seed=...)`` is pure in ``seed`` — the pipeline
     derives that seed from ``(source seed, epoch, index)`` via
     ``batch_seed``, which is the whole addressability story. ``eval_*``
-    expose the fixed test split for the sharded eval loop.
+    expose the fixed test split for the sharded eval loop. Both splits
+    live (and leave) as uint8 at the native 32px grid; ``preproc`` names
+    the on-device normalization/upsample that completes the batch.
     """
 
     def __init__(self, name: str = "cifar10", *,
@@ -129,7 +209,13 @@ class CIFARSource:
         self.spec: DatasetSpec = DATASETS[name]
         self.name = name
         self.seed = seed
+        self.native_resolution = 32
         self.resolution = resolution or self.spec.resolution
+        if self.resolution % self.native_resolution:
+            raise ValueError(
+                f"model resolution {self.resolution} not an integer "
+                f"multiple of the native {self.native_resolution}px "
+                f"CIFAR grid")
         self.mean, self.std = _STATS[name]
 
         found = _find_cifar_files(name, data_dir) if data_dir else None
@@ -148,11 +234,12 @@ class CIFARSource:
         self.procedural = found is None
         if found is not None:
             train_files, test_file, key = found
+            # raw uint8 splits — never a whole-split fp32 copy
             ti, tl = _load_split(train_files, key)
             ei, el = _load_split([test_file], key)
-            self._train_images = normalize_images(ti, self.mean, self.std)
+            self._train_images = ti
             self._train_labels = tl.astype(np.int32)
-            self._eval_images = normalize_images(ei, self.mean, self.std)
+            self._eval_images = ei
             self._eval_labels = el.astype(np.int32)
             if train_size:
                 self._train_images = self._train_images[:train_size]
@@ -169,16 +256,25 @@ class CIFARSource:
             self._eval_images, self._eval_labels = self._procedural_examples(
                 np.random.default_rng((self.seed, 0xE7A1)), n_eval)
 
+    @property
+    def preproc(self) -> Preproc:
+        return Preproc(mean=self.mean, std=self.std,
+                       native_resolution=self.native_resolution)
+
     # ------------------------------------------------------------------
     # procedural generator (CI path — no downloads)
     # ------------------------------------------------------------------
 
     def _procedural_examples(self, rng: np.random.Generator, n: int):
-        """Class-conditional images at the *native* 32px grid, already
-        normalized-scale (templates + noise have ~unit variance) — the
-        shared synthetic generator, so the procedural splits stay
-        learnable the same way the legacy stream is."""
-        return class_conditional_images(self.spec, n, rng, resolution=32)
+        """Class-conditional uint8 images at the *native* 32px grid: the
+        shared synthetic generator emits normalized-scale fp32 (templates
+        + noise, ~unit variance), quantized here through the inverse
+        normalization so the stored bytes look exactly like the disk
+        pickles — and normalizing them on device recovers the learnable
+        signal."""
+        x, labels = class_conditional_images(self.spec, n, rng,
+                                             resolution=32)
+        return quantize_images(x, self.mean, self.std), labels
 
     # ------------------------------------------------------------------
     # train split (cursor-addressable via the pipeline's batch seed)
@@ -190,19 +286,26 @@ class CIFARSource:
             return self._train_size
         return len(self._train_labels)
 
-    def train_batch(self, batch: int, *, seed: int) -> dict:
-        """One un-augmented train batch, pure in ``seed``. Disk mode draws
-        a with-replacement sample of the split (the DataLoader-with-
+    def train_batch(self, batch: int, *, seed: int,
+                    pool: Optional[int] = None) -> dict:
+        """One un-augmented uint8 train batch, pure in ``seed``. Disk mode
+        draws a with-replacement sample of the split (the DataLoader-with-
         shuffle equivalent, but addressable); procedural mode synthesizes
-        the batch from the seed directly."""
+        the batch from the seed directly.
+
+        ``pool`` restricts the sampled index pool to the first ``pool``
+        examples — the §IV-A weak-scaling protocol, where each world size
+        trains on a proportional subset of the real split. The procedural
+        stream has no finite example identity, so there ``pool`` only
+        validates (the epoch bound already shrinks with the fraction)."""
         rng = np.random.default_rng(seed)
+        _check_pool(pool, self.train_size)
         if self.procedural:
             images, labels = self._procedural_examples(rng, batch)
         else:
-            idx = rng.integers(0, len(self._train_labels), (batch,))
+            idx = rng.integers(0, pool or len(self._train_labels), (batch,))
             images, labels = self._train_images[idx], self._train_labels[idx]
-        return {"images": _upsample(images, self.resolution),
-                "labels": labels}
+        return {"images": images, "labels": labels}
 
     # ------------------------------------------------------------------
     # eval split (fixed, finite, padded to a static batch shape)
@@ -213,27 +316,11 @@ class CIFARSource:
         return len(self._eval_labels)
 
     def eval_batches(self, batch: int) -> Iterator[dict]:
-        """Iterate the test split in order. Every yielded batch has the
-        full static shape; the final non-divisible batch is zero-padded
-        with ``mask`` zeros (the eval step multiplies every per-example
-        indicator by the mask, so padding is metric-invisible).
-        Upsampling happens per batch: at 224px the full upsampled CIFAR
-        test split would be ~6 GB of host fp32 per eval invocation."""
-        labels = self._eval_labels
-        n = len(labels)
-        for lo in range(0, n, batch):
-            hi = min(lo + batch, n)
-            m = hi - lo
-            img = _upsample(self._eval_images[lo:hi], self.resolution)
-            lab = labels[lo:hi]
-            mask = np.ones((batch,), np.float32)
-            if m < batch:
-                pad = batch - m
-                img = np.concatenate(
-                    [img, np.zeros((pad,) + img.shape[1:], img.dtype)])
-                lab = np.concatenate([lab, np.zeros((pad,), lab.dtype)])
-                mask[m:] = 0.0
-            yield {"images": img, "labels": lab, "mask": mask}
+        """Iterate the test split in order, uint8 at the native grid (the
+        on-device preprocess upsamples + normalizes — at 224px the old
+        host-side fp32 upsample materialized ~6 GB per eval invocation)."""
+        return padded_eval_batches(self._eval_images, self._eval_labels,
+                                   batch)
 
     def num_eval_batches(self, batch: int) -> int:
         return -(-self.eval_size // batch)
@@ -241,10 +328,22 @@ class CIFARSource:
 
 def make_source(dataset: str, *, data_dir: Optional[str] = None,
                 seed: int = 0, resolution: Optional[int] = None,
-                eval_size: Optional[int] = None) -> Optional[CIFARSource]:
-    """``None`` for the synthetic tensor workload, a CIFARSource otherwise
-    (the one switch ``launch/train.py`` flips on ``--dataset``)."""
+                train_size: Optional[int] = None,
+                eval_size: Optional[int] = None,
+                shard_dir: Optional[str] = None):
+    """``None`` for the synthetic tensor workload, a data source otherwise
+    (the one switch ``launch/train.py`` flips on ``--dataset``).
+
+    ``shard_dir`` takes precedence: it names a webdataset-style shard
+    directory (``data/streaming.py``) and returns a
+    :class:`~repro.data.streaming.ShardedSource` — the ImageNet-class
+    path that streams shards instead of materializing a split in RAM."""
+    if shard_dir:
+        from repro.data.streaming import ShardedSource
+        return ShardedSource(shard_dir, seed=seed, resolution=resolution,
+                             train_size=train_size, eval_size=eval_size)
     if dataset == "synthetic":
         return None
     return CIFARSource(dataset, data_dir=data_dir, seed=seed,
-                       resolution=resolution, eval_size=eval_size)
+                       resolution=resolution, train_size=train_size,
+                       eval_size=eval_size)

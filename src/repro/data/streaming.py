@@ -1,0 +1,247 @@
+"""Sharded streaming dataset source: webdataset-style npz shards behind
+the ``batch_at(epoch, index)`` cursor contract.
+
+The in-RAM :class:`~repro.data.datasets.CIFARSource` stops scaling at
+ImageNet-class inputs (the ``imagenet100`` spec is 100k x 224px — ~15 GB
+even as uint8). This module stores a dataset as a directory of fixed-size
+**uint8 npz shards** plus a JSON manifest, and serves batches by global
+example index through a small LRU shard cache — resident memory is
+``cache_shards * shard_size`` examples regardless of dataset size.
+
+Layout (``shards.json`` + ``{split}-{NNNNN}.npz``)::
+
+    shards.json                 manifest: schema tag, dataset identity,
+                                normalization stats, per-split shard
+                                names/sizes (the global index -> shard
+                                mapping is the running sum of sizes)
+    train-00000.npz ...         images (N, r, r, 3) uint8, labels (N,) i32
+    eval-00000.npz ...
+
+Determinism contract: ``train_batch(batch, seed=...)`` draws global
+indices from ``default_rng(seed)`` exactly like the in-RAM disk source, so
+a batch is pure in ``(seed,)`` **and independent of sharding geometry** —
+re-sharding the same examples at a different ``shard_size`` replays the
+identical stream, and elastic resume works unchanged (regression-tested
+across a shard boundary in ``tests/test_streaming.py``).
+
+``python -m repro.data.streaming --out DIR ...`` writes a shard set from a
+:class:`CIFARSource` (procedural by default — the CI path; ``--data-dir``
+shards the real pickles).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import OrderedDict
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.data.datasets import CIFARSource, Preproc, _check_pool, \
+    padded_eval_batches
+from repro.data.synthetic import DATASETS, DatasetSpec
+
+SCHEMA = "repro-shards/v1"
+MANIFEST = "shards.json"
+DEFAULT_SHARD_SIZE = 1024
+
+
+def _write_split(out_dir: str, split: str, images: np.ndarray,
+                 labels: np.ndarray, shard_size: int):
+    names, sizes = [], []
+    for i, lo in enumerate(range(0, len(labels), shard_size)):
+        hi = min(lo + shard_size, len(labels))
+        name = f"{split}-{i:05d}.npz"
+        np.savez(os.path.join(out_dir, name),
+                 images=np.ascontiguousarray(images[lo:hi], np.uint8),
+                 labels=np.asarray(labels[lo:hi], np.int32))
+        names.append(name)
+        sizes.append(hi - lo)
+    return {"shards": names, "sizes": sizes, "total": int(len(labels))}
+
+
+def write_shards(out_dir: str, source: CIFARSource, *,
+                 shard_size: int = DEFAULT_SHARD_SIZE) -> dict:
+    """Materialize a CIFARSource's splits as a shard directory.
+
+    A procedural source has no stored train split — it is materialized
+    once here, pure in the source seed (so two writers with the same seed
+    produce byte-identical shard sets). Returns the manifest dict."""
+    if shard_size < 1:
+        raise ValueError(f"shard_size must be >= 1: {shard_size}")
+    os.makedirs(out_dir, exist_ok=True)
+    if source.procedural:
+        rng = np.random.default_rng((source.seed, 0x5A4D))
+        train_images, train_labels = source._procedural_examples(
+            rng, source.train_size)
+    else:
+        train_images = source._train_images
+        train_labels = source._train_labels
+    manifest = {
+        "schema": SCHEMA,
+        "dataset": source.name,
+        "num_classes": source.spec.num_classes,
+        "resolution": source.native_resolution,
+        "mean": list(source.mean),
+        "std": list(source.std),
+        "splits": {
+            "train": _write_split(out_dir, "train", train_images,
+                                  train_labels, shard_size),
+            "eval": _write_split(out_dir, "eval", source._eval_images,
+                                 source._eval_labels, shard_size),
+        },
+    }
+    with open(os.path.join(out_dir, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+class ShardedSource:
+    """Shard-directory dataset source, API-compatible with ``CIFARSource``
+    (``train_batch``/``eval_batches``/``preproc``/``spec``/sizes), so the
+    pipeline, engine, and eval loop run on it unchanged.
+
+    Shards load lazily through an LRU cache of ``cache_shards`` entries;
+    a gathered batch groups its indices by shard, so with-replacement
+    sampling touches at most ``batch`` shards and usually far fewer.
+    """
+
+    def __init__(self, shard_dir: str, *, seed: int = 0,
+                 resolution: Optional[int] = None,
+                 train_size: Optional[int] = None,
+                 eval_size: Optional[int] = None, cache_shards: int = 4):
+        path = os.path.join(shard_dir, MANIFEST)
+        if not os.path.isfile(path):
+            raise FileNotFoundError(
+                f"--shard-dir {shard_dir!r} has no {MANIFEST}; write one "
+                f"with `python -m repro.data.streaming --out {shard_dir}`")
+        with open(path) as f:
+            m = json.load(f)
+        if m.get("schema") != SCHEMA:
+            raise ValueError(
+                f"unsupported shard manifest schema {m.get('schema')!r} "
+                f"in {path} (expected {SCHEMA!r})")
+        self.dir = shard_dir
+        self.name = m["dataset"]
+        self.seed = seed
+        self.spec: DatasetSpec = DATASETS.get(
+            self.name,
+            DatasetSpec(self.name, m["num_classes"], 0, m["resolution"]))
+        self.native_resolution = int(m["resolution"])
+        self.resolution = resolution or max(self.spec.resolution,
+                                            self.native_resolution)
+        if self.resolution % self.native_resolution:
+            raise ValueError(
+                f"model resolution {self.resolution} not an integer "
+                f"multiple of the native {self.native_resolution}px grid")
+        self.mean = tuple(m["mean"])
+        self.std = tuple(m["std"])
+        self.procedural = False
+        self._splits = m["splits"]
+        # start offset of each shard = exclusive running sum of sizes
+        self._starts = {
+            split: np.concatenate(
+                [[0], np.cumsum(s["sizes"])[:-1]]).astype(np.int64)
+            for split, s in self._splits.items()}
+        self.train_size = min(train_size or self._splits["train"]["total"],
+                              self._splits["train"]["total"])
+        self.eval_size = min(eval_size or self._splits["eval"]["total"],
+                             self._splits["eval"]["total"])
+        self._cache: OrderedDict = OrderedDict()
+        self._cache_shards = max(1, cache_shards)
+
+    @property
+    def preproc(self) -> Preproc:
+        return Preproc(mean=self.mean, std=self.std,
+                       native_resolution=self.native_resolution)
+
+    # ------------------------------------------------------------------
+    # shard access
+    # ------------------------------------------------------------------
+
+    def _shard(self, split: str, i: int):
+        key = (split, i)
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        name = self._splits[split]["shards"][i]
+        with np.load(os.path.join(self.dir, name)) as z:
+            pair = (np.asarray(z["images"], np.uint8),
+                    np.asarray(z["labels"], np.int32))
+        self._cache[key] = pair
+        if len(self._cache) > self._cache_shards:
+            self._cache.popitem(last=False)
+        return pair
+
+    def _gather(self, split: str, idx: np.ndarray):
+        """Examples at GLOBAL indices ``idx`` (original order preserved),
+        loading each touched shard once."""
+        idx = np.asarray(idx, np.int64)
+        starts = self._starts[split]
+        sid = np.searchsorted(starts, idx, side="right") - 1
+        r = self.native_resolution
+        images = np.empty((len(idx), r, r, 3), np.uint8)
+        labels = np.empty((len(idx),), np.int32)
+        for s in np.unique(sid):
+            imgs, labs = self._shard(split, int(s))
+            sel = sid == s
+            local = idx[sel] - starts[s]
+            images[sel] = imgs[local]
+            labels[sel] = labs[local]
+        return images, labels
+
+    # ------------------------------------------------------------------
+    # the CIFARSource interface
+    # ------------------------------------------------------------------
+
+    def train_batch(self, batch: int, *, seed: int,
+                    pool: Optional[int] = None) -> dict:
+        """Pure in ``seed`` and sharding-geometry-invariant: indices are
+        drawn over the GLOBAL example range exactly like the in-RAM disk
+        source, then resolved through the shard map. ``pool`` restricts
+        the sampled range (§IV-A weak scaling)."""
+        rng = np.random.default_rng(seed)
+        limit = _check_pool(pool, self.train_size)
+        idx = rng.integers(0, limit, (batch,))
+        images, labels = self._gather("train", idx)
+        return {"images": images, "labels": labels}
+
+    def eval_batches(self, batch: int) -> Iterator[dict]:
+        """Iterate the eval split in order at one static padded batch
+        shape — one gathered chunk per yielded batch, so only the shards
+        under the current window are resident."""
+        for lo in range(0, self.eval_size, batch):
+            hi = min(lo + batch, self.eval_size)
+            images, labels = self._gather("eval", np.arange(lo, hi))
+            yield from padded_eval_batches(images, labels, batch)
+
+    def num_eval_batches(self, batch: int) -> int:
+        return -(-self.eval_size // batch)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="write a repro-shards/v1 shard directory from a "
+                    "CIFAR source (procedural unless --data-dir holds "
+                    "the real pickles)")
+    ap.add_argument("--out", required=True, help="shard directory to write")
+    ap.add_argument("--dataset", default="cifar10",
+                    choices=["cifar10", "cifar100"])
+    ap.add_argument("--data-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--train-size", type=int, default=None)
+    ap.add_argument("--eval-size", type=int, default=None)
+    ap.add_argument("--shard-size", type=int, default=DEFAULT_SHARD_SIZE)
+    args = ap.parse_args(argv)
+    src = CIFARSource(args.dataset, data_dir=args.data_dir, seed=args.seed,
+                      train_size=args.train_size, eval_size=args.eval_size)
+    m = write_shards(args.out, src, shard_size=args.shard_size)
+    tr, ev = m["splits"]["train"], m["splits"]["eval"]
+    print(f"wrote {args.out}: {len(tr['shards'])} train shards "
+          f"({tr['total']} examples) + {len(ev['shards'])} eval shards "
+          f"({ev['total']} examples), shard_size={args.shard_size}")
+
+
+if __name__ == "__main__":
+    main()

@@ -111,6 +111,19 @@ def main():
                          "(cifar-10-batches-py / cifar-100-python); unset "
                          "or absent -> deterministic procedural CIFAR "
                          "(no downloads, CI-safe)")
+    ap.add_argument("--shard-dir", default="",
+                    help="stream from a repro-shards/v1 shard directory "
+                         "(data/streaming.py; write one with `python -m "
+                         "repro.data.streaming --out DIR`) instead of an "
+                         "in-RAM split — overrides --dataset/--data-dir")
+    ap.add_argument("--train-size", type=int, default=0,
+                    help="truncate/bound the train split to N examples "
+                         "(0 = full split; bounds disk + shard splits and "
+                         "sizes the procedural stream's epoch)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="batches in flight at EACH prefetch stage "
+                         "(synthesis and host->device transfer run in "
+                         "separate threads)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="evaluate on the held-out split every N steps "
                          "and at the end (0 = no eval; needs a real "
@@ -220,9 +233,20 @@ def main():
         cfg = cfg.replace(use_pallas=True)
     if args.dtype:
         cfg = cfg.replace(dtype=args.dtype)
+    # the data source is built BEFORE the engine: a uint8-shipping source
+    # hands the engine its Preproc (the on-device normalize/upsample) and
+    # its spec names the class count
+    source = None
+    if cfg.arch_type == "vit" and \
+            (args.shard_dir or args.dataset != "synthetic"):
+        source = make_source(args.dataset, data_dir=args.data_dir or None,
+                             seed=args.seed, resolution=cfg.image_size,
+                             train_size=args.train_size or None,
+                             eval_size=args.eval_size or None,
+                             shard_dir=args.shard_dir or None)
     if cfg.arch_type == "vit":
-        spec_name = args.dataset if args.dataset in DATASETS else "cifar10"
-        cfg = cfg.replace(num_classes=DATASETS[spec_name].num_classes,
+        spec = source.spec if source is not None else DATASETS["cifar10"]
+        cfg = cfg.replace(num_classes=spec.num_classes,
                           label_smoothing=args.label_smoothing)
     mesh = make_local_mesh(model=args.model_axis, pipe=args.pp)
     dp = mesh.devices.shape[0]
@@ -238,24 +262,24 @@ def main():
         guard_max_skips=args.guard_max_skips)
     aug = AugmentConfig(num_classes=cfg.num_classes) \
         if args.augment and cfg.arch_type == "vit" else None
-    eng = DistributedEngine(cfg, ecfg, mesh, aug=aug)
+    eng = DistributedEngine(
+        cfg, ecfg, mesh, aug=aug,
+        preproc=source.preproc if source is not None else None)
     print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"devices={mesh.devices.size} dp={dp} pp={args.pp} "
           f"micro_batch={ecfg.derived_micro_batch(dp)} accum={args.accum} "
           f"zero={args.zero} opt={args.optimizer} "
           f"aug={'on' if aug else 'off'}")
 
-    source = None
     if cfg.arch_type == "vit":
-        if args.dataset != "synthetic":
-            # real CIFAR from --data-dir when present, else the
-            # deterministic procedural generator — same cursor contract
-            source = make_source(args.dataset,
-                                 data_dir=args.data_dir or None,
-                                 seed=args.seed, resolution=cfg.image_size,
-                                 eval_size=args.eval_size or None)
-            print(f"[train] dataset={args.dataset} "
-                  f"{'procedural' if source.procedural else 'disk'} "
+        if source is not None:
+            # real CIFAR from --data-dir when present, a shard stream
+            # under --shard-dir, else the deterministic procedural
+            # generator — all behind the same cursor contract, all uint8
+            # on the host (normalize/upsample run inside the jitted step)
+            backing = "shards" if args.shard_dir else \
+                "procedural" if source.procedural else "disk"
+            print(f"[train] dataset={source.name} {backing} "
                   f"train={source.train_size} eval={source.eval_size}")
             pipe = DataPipeline(kind="image", global_batch=args.batch,
                                 source=source, seed=args.seed)
@@ -331,7 +355,8 @@ def main():
         bshard = shd.named(mesh, shd.batch_specs(cfg, pipe.batch_shapes(),
                                                  mesh))
         prefetcher = pipe.prefetch(int(state.epoch), int(state.batch_index),
-                                   shardings=bshard)
+                                   shardings=bshard,
+                                   depth=args.prefetch_depth)
 
     def fetch(step):
         """-> (batch, cursor-after-this-step)"""
@@ -359,7 +384,8 @@ def main():
                 # trajectory exactly matches an uninterrupted run.
                 skips = 0
                 while True:
-                    fed = _faults.poison_batch(batch, step)
+                    fed = _faults.poison_batch(batch, step,
+                                               resolution=cfg.image_size)
                     state, metrics = step_fn(state, fed)
                     if not ecfg.guard_anomalies or \
                             bool(np.asarray(metrics["step_ok"])):

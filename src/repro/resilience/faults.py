@@ -213,23 +213,41 @@ class FaultPlan:
                 f"injected transient {kind} fault at step {flt.step} "
                 f"({detail})")
 
-    def poison_batch(self, batch, step: int):
+    def poison_batch(self, batch, step: int, *, resolution: int = 0):
         """``nan_grad`` site: return the batch with every float leaf
         poisoned to NaN (once per planned step — the retry after the
-        guard skips the update sees the clean batch again)."""
+        guard skips the update sees the clean batch again). uint8 image
+        batches (the streaming data path) carry no float leaf to
+        poison, so the images leaf becomes a float32 NaN batch at
+        ``resolution`` (the model input size) — ``device_preprocess``
+        passes float batches through untouched, so the NaN still
+        reaches the loss and trips the guard."""
         with self._lock:
             flt = self._match("nan_grad", step)
             if flt is None:
                 return batch
             flt.remaining = 0
-            self._log(flt, "float batch leaves poisoned to NaN")
+            self._log(flt, "batch poisoned to NaN")
+
+        hit = False
 
         def poison(x):
+            nonlocal hit
             if np.issubdtype(np.asarray(x).dtype, np.floating):
+                hit = True
                 return x * float("nan")
             return x
         import jax
-        return jax.tree.map(poison, batch)
+        out = jax.tree.map(poison, batch)
+        img = batch.get("images") if isinstance(batch, dict) else None
+        if not hit and img is not None and \
+                np.asarray(img).dtype == np.uint8:
+            shape = np.asarray(img).shape
+            if resolution:
+                shape = shape[:1] + (resolution, resolution) + shape[3:]
+            out = dict(out)
+            out["images"] = np.full(shape, np.nan, np.float32)
+        return out
 
     def corrupt_committed(self, ckpt_path: str, step: int):
         """``ckpt_corrupt`` site: after the atomic-rename commit, flip
@@ -306,10 +324,10 @@ def check(kind: str, step: int):
         _ACTIVE.check(kind, step)
 
 
-def poison_batch(batch, step: int):
+def poison_batch(batch, step: int, *, resolution: int = 0):
     if _ACTIVE is None:
         return batch
-    return _ACTIVE.poison_batch(batch, step)
+    return _ACTIVE.poison_batch(batch, step, resolution=resolution)
 
 
 def corrupt_committed(ckpt_path: str, step: int):

@@ -42,16 +42,27 @@ def test_augmentation_deterministic_under_cursor_contract(
         src = CIFARSource("cifar10", seed=seed, eval_size=8)
         pipe = DataPipeline(kind="image", global_batch=4, seed=seed,
                             source=src, epoch_size=16)
-        batch = pipe.batch_at(epoch, index)
+        batch = pipe.batch_at(epoch, index)       # uint8 at 32px
         import jax.numpy as jnp
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        return augment_batch(_train_rng(seed, step), batch, _aug_cfg())
+        return augment_batch(_train_rng(seed, step), batch, _aug_cfg(),
+                             preproc=src.preproc, resolution=32)
 
     a, b = draw(), draw()
     np.testing.assert_array_equal(np.asarray(a["images"]),
                                   np.asarray(b["images"]))
     np.testing.assert_array_equal(np.asarray(a["labels"]),
                                   np.asarray(b["labels"]))
+    assert np.asarray(a["images"]).dtype == np.float32  # normalized out
+
+
+def test_uint8_batch_without_preproc_raises():
+    import jax, jax.numpy as jnp
+    from repro.data import augment_batch
+    batch = {"images": jnp.zeros((4, 32, 32, 3), jnp.uint8),
+             "labels": jnp.zeros((4,), jnp.int32)}
+    with pytest.raises(ValueError, match="needs preproc"):
+        augment_batch(jax.random.PRNGKey(0), batch, _aug_cfg())
 
 
 @settings(**SETTINGS)

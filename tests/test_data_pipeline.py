@@ -159,6 +159,20 @@ def test_source_behind_pipeline_cursor_contract():
                            p1.batch_at(1, 0)["images"])
 
 
+def test_batch_shapes_uint8_native_with_source_fp32_without():
+    """A source-backed pipeline declares uint8 batches at the NATIVE grid
+    (what actually crosses host->device — 4x fewer bytes); the legacy
+    synthetic stream stays pre-normalized fp32 at the model resolution."""
+    src = CIFARSource("cifar10", seed=0, resolution=64, eval_size=16)
+    shp = DataPipeline(kind="image", global_batch=8, source=src,
+                       seed=0).batch_shapes()
+    assert shp["images"].shape == (8, 32, 32, 3)
+    assert shp["images"].dtype == np.uint8
+    shp = _pipe().batch_shapes()
+    assert shp["images"].shape == (8, 32, 32, 3)
+    assert shp["images"].dtype == np.float32
+
+
 def _write_fake_cifar10(root):
     """Tiny but format-faithful cifar-10-batches-py distribution."""
     d = root / "cifar-10-batches-py"
@@ -178,29 +192,70 @@ def test_disk_loader_reads_pickle_batches(tmp_path):
     src = CIFARSource("cifar10", data_dir=str(tmp_path), seed=0)
     assert not src.procedural
     assert src.train_size == 20 and src.eval_size == 10
-    # normalization: recompute one pixel by hand from the raw CHW rows
+    # splits stay RAW uint8 (the 4x-smaller resident copy; normalization
+    # happens on device) — the stored bytes are exactly the pickle rows
+    assert src._eval_images.dtype == np.uint8
     img0 = raw_test[0].reshape(3, 32, 32).transpose(1, 2, 0)
-    expect = (img0[0, 0].astype(np.float32) / 255.0
-              - np.asarray(src.mean, np.float32)) \
-        / np.asarray(src.std, np.float32)
-    np.testing.assert_allclose(src._eval_images[0, 0, 0], expect,
-                               rtol=1e-6)
+    np.testing.assert_array_equal(src._eval_images[0], img0)
     b = src.train_batch(6, seed=5)
     assert b["images"].shape == (6, 32, 32, 3)
+    assert b["images"].dtype == np.uint8
     assert b["labels"].dtype == np.int32
     # purity in seed holds for the disk path too
     b2 = src.train_batch(6, seed=5)
     np.testing.assert_array_equal(b["images"], b2["images"])
 
 
-def test_disk_loader_upsamples_to_model_resolution(tmp_path):
+def test_eval_stays_native_and_device_upsamples(tmp_path):
+    """The host never upsamples: eval batches leave at the native 32px
+    uint8 grid, and the DEVICE half (device_preprocess) produces the
+    model-resolution normalized fp32 tensor with nearest-neighbor
+    blocks."""
+    import jax.numpy as jnp
+    from repro.data.augment import device_preprocess
     _write_fake_cifar10(tmp_path)
     src = CIFARSource("cifar10", data_dir=str(tmp_path), resolution=64)
     b = next(src.eval_batches(4))
-    assert b["images"].shape == (4, 64, 64, 3)
+    assert b["images"].shape == (4, 32, 32, 3)
+    assert b["images"].dtype == np.uint8
+    out = device_preprocess(dict(b), src.preproc, 64)
+    assert out["images"].shape == (4, 64, 64, 3)
+    assert out["images"].dtype == jnp.float32
     # nearest-neighbor: each native pixel becomes a constant 2x2 block
-    np.testing.assert_array_equal(b["images"][0, 0, 0],
-                                  b["images"][0, 1, 1])
+    np.testing.assert_array_equal(np.asarray(out["images"][0, 0, 0]),
+                                  np.asarray(out["images"][0, 1, 1]))
+
+
+def test_weak_scaling_pool_restricts_sampled_indices(tmp_path):
+    """§IV-A regression: weak_scaling_frac must restrict the disk-mode
+    SAMPLED pool, not just shorten the epoch — every drawn example must
+    come from the first frac-of-the-split slice."""
+    _write_fake_cifar10(tmp_path)
+    src = CIFARSource("cifar10", data_dir=str(tmp_path), seed=0)
+    p = DataPipeline(kind="image", global_batch=8, seed=3, source=src,
+                     weak_scaling_frac=0.25)
+    assert p.sample_pool == 5           # 20 * 0.25
+    allowed = src._train_images[:5]
+    for i in range(p.steps_per_epoch):
+        for img in p.batch_at(0, i)["images"]:
+            assert any(np.array_equal(img, a) for a in allowed)
+    # frac=1.0 derives no pool at all (full-split sampling)
+    assert DataPipeline(kind="image", global_batch=8, source=src,
+                        seed=3).sample_pool is None
+    # out-of-range pools are a wiring error, not a silent clamp
+    with pytest.raises(ValueError, match="out of range"):
+        src.train_batch(4, seed=0, pool=999)
+
+
+def test_local_shard_rejects_non_divisible_batch():
+    """local_shard used to silently truncate (per = B // world); now a
+    non-divisible global batch raises, naming both numbers."""
+    p = _pipe()
+    batch = {"images": np.zeros((10, 4, 4, 3)), "labels": np.zeros((10,))}
+    with pytest.raises(ValueError, match="10.*world size 4"):
+        p.local_shard(batch, 0, 4)
+    shard = p.local_shard(batch, 1, 2)
+    assert shard["images"].shape[0] == 5
 
 
 def test_eval_batches_pad_final_batch_with_mask():
@@ -252,7 +307,7 @@ def test_prefetcher_close_terminates_thread_and_unblocks_consumer():
     pf = p.prefetch(0, 0)
     next(pf)
     pf.close()
-    assert not pf._thread.is_alive()
+    assert not any(t.is_alive() for t in pf._threads)
     # next() after close must NOT block on the drained queue
     with pytest.raises(StopIteration):
         next(pf)
@@ -260,36 +315,37 @@ def test_prefetcher_close_terminates_thread_and_unblocks_consumer():
 
 
 def test_prefetcher_error_with_full_queue_does_not_strand_thread():
-    """Producer raises while the queue is full and the consumer has
+    """Producer raises while the queues are full and the consumer has
     stopped consuming — the old blocking error-put stranded the thread
-    here; the stop-aware put lets close() reclaim it."""
+    here; the stop-aware put lets close() reclaim both stages."""
     p = _pipe()
     orig = p.batch_at
     p.batch_at = lambda e, i: orig(e, i) if (e, i) == (0, 0) \
         else (_ for _ in ()).throw(ValueError("boom"))
-    pf = p.prefetch(0, 0)   # depth=1: first batch fills the queue,
-    #                         second raises -> error put on a FULL queue
+    pf = p.prefetch(0, 0, depth=1)  # depth=1: first batch fills the
+    #                   device queue, the forwarded error then meets a
+    #                   FULL queue with nobody consuming
     _wait_until(lambda: pf._error is not None)
-    assert pf._thread.is_alive()        # parked in the stop-aware put
+    assert any(t.is_alive() for t in pf._threads)   # parked in a put
     pf.close()
-    assert not pf._thread.is_alive()    # reclaimed, not stranded
+    assert not any(t.is_alive() for t in pf._threads)   # reclaimed
 
 
 def test_prefetcher_dropped_reference_reclaims_thread():
-    """Consumer walks away without close(): __del__ must stop the
-    producer instead of leaving it parked forever."""
+    """Consumer walks away without close(): __del__ must stop BOTH
+    stage threads instead of leaving them parked forever."""
     p = _pipe()
     pf = p.prefetch(0, 0)
-    thread = pf._thread
+    threads = pf._threads
     next(pf)
     del pf
     gc.collect()
-    _wait_until(lambda: not thread.is_alive())
+    _wait_until(lambda: not any(t.is_alive() for t in threads))
 
 
 def test_prefetcher_error_after_ok_items_still_propagates():
     """Error queued behind buffered ok items: the consumer sees the good
-    batches first, then the RuntimeError, and the thread is gone."""
+    batches first, then the RuntimeError, and the threads are gone."""
     p = _pipe()
     orig = p.batch_at
     p.batch_at = lambda e, i: orig(e, i) if i < 2 \
@@ -299,7 +355,45 @@ def test_prefetcher_error_after_ok_items_still_propagates():
         assert next(pf)[0] == (0, 1)
         with pytest.raises(RuntimeError, match="prefetch thread failed"):
             next(pf)
-    assert not pf._thread.is_alive()
+    assert not any(t.is_alive() for t in pf._threads)
+
+
+def test_prefetcher_depth_n_overlaps_and_preserves_order():
+    """The two-stage N-deep pipeline (synthesis thread -> transfer
+    thread) must yield the exact cursor-ordered stream — depth changes
+    only overlap, never content or order."""
+    p = _pipe(epoch_size=24)            # 3 steps/epoch
+    with p.prefetch(0, 0, depth=4) as pf:
+        assert {t.name for t in pf._threads} == \
+            {"data-synth", "data-transfer"}
+        got = [next(pf) for _ in range(8)]  # crosses epoch boundaries
+    cur = (0, 0)
+    for cursor, batch, nxt in got:
+        assert cursor == cur
+        np.testing.assert_array_equal(np.asarray(batch["images"]),
+                                      p.batch_at(*cursor)["images"])
+        assert nxt == p.next_cursor(*cursor)
+        cur = nxt
+
+
+def test_prefetcher_close_warns_on_hung_producer():
+    """A producer that outlives the join timeout must be REPORTED (with
+    the pending cursor), not silently leaked."""
+    import threading
+    release = threading.Event()
+    p = _pipe()
+    p.batch_at = lambda e, i: release.wait() and None    # wedged source
+    pf = p.prefetch(0, 0, retry=None)
+    pf.JOIN_TIMEOUT = 0.2
+    with pytest.warns(RuntimeWarning,
+                      match=r"pending cursor \(epoch 0, batch 0\)"):
+        pf.close()
+    release.set()                       # let the daemon thread die
+
+
+def test_prefetch_depth_must_be_positive():
+    with pytest.raises(ValueError, match="depth"):
+        _pipe().prefetch(0, 0, depth=0)
 
 
 def test_prefetcher_retries_transient_source_errors():
@@ -370,11 +464,11 @@ def test_prefetcher_close_interrupts_backoff_sleep():
         TransientError("always down"))
     retry = BackoffPolicy(max_attempts=10, base_delay=30.0, max_delay=30.0)
     pf = p.prefetch(0, 0, retry=retry)
-    _wait_until(lambda: pf._thread.is_alive())
+    _wait_until(lambda: any(t.is_alive() for t in pf._threads))
     t0 = time.time()
     pf.close()
     assert time.time() - t0 < 10        # not a 30s backoff serve-out
-    assert not pf._thread.is_alive()
+    assert not any(t.is_alive() for t in pf._threads)
 
 
 def test_batch_at_data_fault_injection_roundtrip():

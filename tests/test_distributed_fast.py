@@ -198,6 +198,9 @@ from repro.data import AugmentConfig, CIFARSource, DataPipeline
 CFG = get_smoke_config("vit-b16").replace(dtype="float32")
 EVAL_SIZE = 52      # 52 % 8 != 0 -> the final eval batch is mask-padded
 
+def source():
+    return CIFARSource("cifar10", seed=3, eval_size=EVAL_SIZE)
+
 def make_engine(dp, pipe=1, zero=0, aug=None):
     if pipe > 1:
         mesh = jax.make_mesh((dp, pipe, 1), ("data", "pipe", "model"))
@@ -206,10 +209,9 @@ def make_engine(dp, pipe=1, zero=0, aug=None):
     ecfg = EngineConfig(train_batch_size=8, gradient_accumulation_steps=2,
                         zero_stage=zero, lr=1e-3, total_steps=10,
                         warmup_steps=1, pipeline_stages=pipe)
-    return DistributedEngine(CFG, ecfg, mesh, aug=aug)
-
-def source():
-    return CIFARSource("cifar10", seed=3, eval_size=EVAL_SIZE)
+    # preproc: the source ships uint8 — the jitted steps normalize/upsample
+    return DistributedEngine(CFG, ecfg, mesh, aug=aug,
+                             preproc=source().preproc)
 """
 
 

@@ -122,15 +122,45 @@ def test_loss_from_logits_soft_label_path():
     assert abs(float(loss_sm) - float(loss_h)) > 1e-6
 
 
+def test_device_normalize_matches_host_reference():
+    """The jitted fused cast-and-normalize (augment.normalize) must equal
+    the host reference normalize_images to fp32 tolerance — the uint8-path
+    parity pin."""
+    from repro.data.augment import normalize, upsample
+    from repro.data.datasets import _upsample, normalize_images
+    src = CIFARSource("cifar10", seed=2, eval_size=16)
+    u8 = next(src.eval_batches(16))["images"]
+    ref = normalize_images(u8, src.mean, src.std)
+    got = np.asarray(jax.jit(normalize, static_argnums=1)(
+        jnp.asarray(u8), src.preproc))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    # upsample parity too: device nearest-neighbor == host oracle
+    np.testing.assert_array_equal(
+        np.asarray(upsample(jnp.asarray(u8), 64)), _upsample(u8, 64))
+
+
+def test_device_preprocess_requires_stats_for_uint8():
+    from repro.data.augment import device_preprocess
+    u8 = {"images": jnp.zeros((2, 32, 32, 3), jnp.uint8)}
+    with pytest.raises(ValueError, match="no normalization statistics"):
+        device_preprocess(u8, None, 32)
+    f32 = {"images": jnp.zeros((2, 32, 32, 3), jnp.float32)}
+    # float batches (legacy synthetic stream) pass through untouched
+    np.testing.assert_array_equal(
+        np.asarray(device_preprocess(f32, None, 32)["images"]),
+        np.asarray(f32["images"]))
+
+
 def test_engine_evaluate_single_device():
     """End-to-end eval loop on one device: counts accumulate across the
-    padded batch stream and rates derive from the exact split size."""
+    padded UINT8 batch stream (preprocessed inside the jitted eval step)
+    and rates derive from the exact split size."""
     cfg = get_smoke_config("vit-b16").replace(dtype="float32")
+    src = CIFARSource("cifar10", seed=0, eval_size=21)
     eng = DistributedEngine(cfg, EngineConfig(train_batch_size=8,
                                               total_steps=10,
                                               warmup_steps=1),
-                            make_local_mesh())
-    src = CIFARSource("cifar10", seed=0, eval_size=21)
+                            make_local_mesh(), preproc=src.preproc)
     res = eng.evaluate(eng.init_state(seed=0), src.eval_batches(8))
     assert res["eval_count"] == 21
     assert 0 <= res["eval_top1_count"] <= res["eval_top5_count"] <= 21
@@ -151,3 +181,20 @@ def test_engine_rejects_augment_with_pipeline_or_non_vit():
                                            total_steps=10), mesh, aug=aug)
     with pytest.raises(ValueError, match="num_classes"):
         AugmentConfig(num_classes=0).validate()
+
+
+def test_engine_rejects_bad_preproc_wiring():
+    from repro.data import Preproc
+    mesh = make_local_mesh()
+    pre = Preproc(mean=(0, 0, 0), std=(1, 1, 1), native_resolution=32)
+    lm = get_smoke_config("qwen2.5-14b")
+    with pytest.raises(ValueError, match="vit"):
+        DistributedEngine(lm, EngineConfig(train_batch_size=8,
+                                           total_steps=10), mesh,
+                          preproc=pre)
+    vit = get_smoke_config("vit-b16")       # image_size 32
+    bad = Preproc(mean=(0, 0, 0), std=(1, 1, 1), native_resolution=28)
+    with pytest.raises(ValueError, match="integer"):
+        DistributedEngine(vit, EngineConfig(train_batch_size=8,
+                                            total_steps=10), mesh,
+                          preproc=bad)

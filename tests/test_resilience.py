@@ -96,6 +96,22 @@ def test_poison_batch_fires_once():
     assert np.isfinite(np.asarray(again["images"])).all()
 
 
+def test_poison_batch_handles_uint8_image_batches():
+    """The uint8 streaming data path ships no float leaf — poisoning
+    must still yield a batch the guard can catch: the images leaf
+    becomes float32 NaN at the model resolution (device_preprocess
+    passes float batches through untouched)."""
+    p = FaultPlan.parse("nan_grad@1")
+    batch = {"images": np.zeros((2, 16, 16, 3), np.uint8),
+             "labels": np.arange(2, dtype=np.int32)}
+    fed = p.poison_batch(batch, 1, resolution=32)
+    assert fed["images"].dtype == np.float32
+    assert fed["images"].shape == (2, 32, 32, 3)
+    assert np.isnan(fed["images"]).all()
+    assert fed["labels"].dtype == np.int32
+    assert batch["images"].dtype == np.uint8    # original untouched
+
+
 def test_fault_log_marks_fired_faults_consumed(tmp_path):
     """The once-only-across-restarts contract: a relaunched run that
     re-executes the fault step must not replay the fault."""
