@@ -1,7 +1,10 @@
 """Scaling suite: the paper's strong-scaling experiment as a tracked
-artifact — dp x pp layout sweep of the ViT-B/16 smoke workload on host
-platform devices, emitting per-layout step time, 1F1B bubble fraction, and
-per-collective bytes from the trip-count-aware HLO analyzer.
+artifact — dp x pp (x interleave) layout sweep of the ViT-B/16 smoke
+workload on host platform devices, emitting per-layout step time,
+simulated 1F1B bubble fraction, per-collective bytes from the
+trip-count-aware HLO analyzer, and the pp_peak_mem_M{4,8,16} peak-memory
+axis (compiled temp bytes of the staged pipeline backward vs microbatch
+count — flat in M is the memory-boundedness contract CI gates on).
 
 Each layout runs in a subprocess (host device count is fixed at jax init,
 so an in-process sweep cannot change it); the child measures a jitted
@@ -20,8 +23,10 @@ import json
 import subprocess
 import sys
 
-# dp x pp over 8 host devices; (8, 1) is the dp-only baseline
-LAYOUTS = ((8, 1), (4, 2), (2, 4))
+# dp x pp x interleave over 8 host devices; (8, 1, 1) is the dp-only
+# baseline and (4, 2, 2) the Megatron interleaved layout (v=2 virtual
+# chunks per pipe device)
+LAYOUTS = ((8, 1, 1), (4, 2, 1), (2, 4, 1), (4, 2, 2))
 DEVICES = 8
 ACCUM = 4
 BATCH = 32
@@ -32,16 +37,17 @@ import json, sys, time
 import jax, jax.numpy as jnp
 from repro.configs import get_smoke_config, EngineConfig
 from repro.core.engine import DistributedEngine
-from repro.core.pipeline import bubble_fraction
+from repro.core.pipeline import simulated_bubble_fraction
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_local_mesh
 from repro.launch.specs import concrete_batch
 
-dp, pp, batch, accum, steps = (int(a) for a in sys.argv[1:6])
+dp, pp, v, batch, accum, steps = (int(a) for a in sys.argv[1:7])
 cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
 mesh = make_local_mesh(model=1, pipe=pp)
 ecfg = EngineConfig(train_batch_size=batch, gradient_accumulation_steps=accum,
-                    total_steps=10, warmup_steps=1, pipeline_stages=pp)
+                    total_steps=10, warmup_steps=1, pipeline_stages=pp,
+                    pipeline_interleave=v)
 eng = DistributedEngine(cfg, ecfg, mesh)
 state = eng.init_state(seed=0)
 step = eng.jit_train_step(donate=False)
@@ -58,25 +64,29 @@ with mesh:
     hlo = step.lower(state, b).compile().as_text()
 totals = hlo_analysis.analyze(hlo)
 print("SCALING_JSON " + json.dumps({
-    "dp": dp, "pp": pp, "step_us": dt * 1e6,
-    "bubble_frac": bubble_fraction(accum, pp),
-    "coll": {k: v for k, v in totals.coll.items() if v},
+    "dp": dp, "pp": pp, "v": v, "step_us": dt * 1e6,
+    # executed-schedule bubble read off the simulator (== analytic
+    # (S-1)/(v*M+S-1) for both flat and interleaved schedules)
+    "bubble_frac": simulated_bubble_fraction(accum, pp, v) if pp > 1
+    else 0.0,
+    "coll": {k: v_ for k, v_ in totals.coll.items() if v_},
     "coll_bytes": totals.coll_bytes,
     "loss": float(out[1]["loss"]),
 }))
 """
 
 
-def _run_layout(dp: int, pp: int) -> dict:
+def _run_layout(dp: int, pp: int, v: int) -> dict:
     from benchmarks.common import child_env
     r = subprocess.run(
-        [sys.executable, "-c", _CHILD, str(dp), str(pp), str(BATCH),
+        [sys.executable, "-c", _CHILD, str(dp), str(pp), str(v), str(BATCH),
          str(ACCUM), str(STEPS)],
-        capture_output=True, text=True, timeout=1200,
+        capture_output=True, text=True, timeout=1800,
         env=child_env(DEVICES))
     if r.returncode != 0:
         raise RuntimeError(
-            f"scaling child dp={dp} pp={pp} failed:\n{r.stderr[-2000:]}")
+            f"scaling child dp={dp} pp={pp} v={v} failed:"
+            f"\n{r.stderr[-2000:]}")
     for line in r.stdout.splitlines():
         if line.startswith("SCALING_JSON "):
             return json.loads(line[len("SCALING_JSON "):])
@@ -84,18 +94,89 @@ def _run_layout(dp: int, pp: int) -> dict:
 
 
 def bench_scaling_layouts(rows):
-    """One row per dp x pp layout: measured step time; derived carries the
-    analytic 1F1B bubble fraction and the HLO collective-byte breakdown."""
-    results = [_run_layout(dp, pp) for dp, pp in LAYOUTS]
+    """One row per dp x pp (x interleave) layout: measured step time;
+    derived carries the simulated 1F1B bubble fraction and the HLO
+    collective-byte breakdown."""
+    results = [_run_layout(dp, pp, v) for dp, pp, v in LAYOUTS]
     base = results[0]["step_us"]
     for res in results:
         coll = ";".join(f"{k.replace('-', '_')}={v:.3e}"
                         for k, v in sorted(res["coll"].items()))
+        name = f"scaling_dp{res['dp']}_pp{res['pp']}" + (
+            f"_v{res['v']}" if res["v"] > 1 else "")
         rows.append(
-            f"scaling_dp{res['dp']}_pp{res['pp']},{res['step_us']:.2f},"
+            f"{name},{res['step_us']:.2f},"
             f"bubble_frac={res['bubble_frac']:.3f};"
             f"coll_bytes={res['coll_bytes']:.3e};"
             f"rel_step={res['step_us'] / base:.2f};{coll}")
+
+
+# peak-memory-vs-M axis: compiled temp-buffer bytes (XLA buffer
+# assignment = peak simultaneous liveness) of the staged 1F1B
+# value-and-grad at fixed stages S while the microbatch COUNT M grows
+# with per-microbatch size held constant. The manual per-chunk VJP path
+# keeps only O(S) residual sets live, so the activation component is
+# flat in M — the old AD-through-schedule path grew ~linearly (all M
+# residual sets live through the backward). The CI memory-regression
+# gate fails if the M=16/M=4 ratio exceeds PEAK_MEM_GATE.
+PEAK_MEM_MICROS = (4, 8, 16)
+PEAK_MEM_STAGES = 2
+PEAK_MEM_MB = 16          # per-microbatch batch size (activations dominate)
+PEAK_MEM_GATE = 2.2       # linear growth would be ~4x over M=4 -> 16
+
+_PEAK_MEM_CHILD = r"""
+import json, sys
+import jax
+from repro.configs import get_smoke_config
+from repro.core import pipeline
+from repro.launch.specs import concrete_batch
+from repro.models import transformer as model
+
+stages, mb = int(sys.argv[1]), int(sys.argv[2])
+micros = [int(a) for a in sys.argv[3:]]
+cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
+params = model.init_params(cfg, jax.random.PRNGKey(0))
+out = {}
+for M in micros:
+    batch = concrete_batch(cfg, mb * M, 32, seed=0)
+    compiled = jax.jit(lambda p, b: pipeline.pipelined_value_and_grad(
+        cfg, p, b, stages=stages, num_micro=M, pipe_axis=None)).lower(
+        params, batch).compile()
+    ma = compiled.memory_analysis()
+    if ma is None or not getattr(ma, "temp_size_in_bytes", 0):
+        print("PEAK_MEM_JSON " + json.dumps({"unsupported": True}))
+        sys.exit(0)
+    out[str(M)] = int(ma.temp_size_in_bytes)
+print("PEAK_MEM_JSON " + json.dumps(out))
+"""
+
+
+def bench_pp_peak_mem(rows):
+    """pp_peak_mem_M{4,8,16} rows: compiled peak temp bytes of the staged
+    pipeline backward at fixed S=2 and fixed per-microbatch size — the
+    memory-boundedness trajectory (flat-in-M is the acceptance bar)."""
+    from benchmarks.common import child_env
+    r = subprocess.run(
+        [sys.executable, "-c", _PEAK_MEM_CHILD, str(PEAK_MEM_STAGES),
+         str(PEAK_MEM_MB)] + [str(m) for m in PEAK_MEM_MICROS],
+        capture_output=True, text=True, timeout=1800, env=child_env(1))
+    if r.returncode != 0:
+        raise RuntimeError(f"peak-mem bench failed:\n{r.stderr[-2000:]}")
+    line = next(ln for ln in r.stdout.splitlines()
+                if ln.startswith("PEAK_MEM_JSON "))
+    res = json.loads(line[len("PEAK_MEM_JSON "):])
+    if res.get("unsupported"):
+        rows.append("pp_peak_mem_unsupported,0.00,"
+                    "compiled memory_analysis unavailable on this backend")
+        return
+    base = res[str(PEAK_MEM_MICROS[0])]
+    for m in PEAK_MEM_MICROS:
+        b = res[str(m)]
+        rows.append(
+            f"pp_peak_mem_M{m},{float(b):.2f},"
+            f"peak_temp_mb={b / 1e6:.2f};ratio_vs_M4={b / base:.3f};"
+            f"stages={PEAK_MEM_STAGES};micro_batch={PEAK_MEM_MB};"
+            f"gate={PEAK_MEM_GATE}")
 
 
 # host-data-path ablation: synchronous synth+device_put per step vs the
@@ -228,4 +309,5 @@ def bench_guard_overhead(rows):
         f"no-op select + host step_ok readback (core/engine.py)")
 
 
-ALL = [bench_scaling_layouts, bench_data_prefetch, bench_guard_overhead]
+ALL = [bench_scaling_layouts, bench_pp_peak_mem, bench_data_prefetch,
+       bench_guard_overhead]

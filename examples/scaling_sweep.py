@@ -21,7 +21,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def run_train(devices: int, batch: int, steps: int = 8, *, pp: int = 1,
-              accum: int = 1, seed: int = 0) -> dict:
+              accum: int = 1, interleave: int = 1, layers: int = 0,
+              seed: int = 0) -> dict:
     """One trainer subprocess -> {"wall_s", "final_loss", "history"}."""
     env = {**os.environ, "PYTHONPATH": os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "..", "src")}
@@ -31,8 +32,9 @@ def run_train(devices: int, batch: int, steps: int = 8, *, pp: int = 1,
             [sys.executable, "-m", "repro.launch.train", "--arch", "vit-b16",
              "--smoke", "--steps", str(steps), "--batch", str(batch),
              "--devices", str(devices), "--log-every", str(steps),
-             "--pp", str(pp), "--accum", str(accum), "--seed", str(seed),
-             "--metrics-out", f.name],
+             "--pp", str(pp), "--accum", str(accum),
+             "--pp-interleave", str(interleave), "--seed", str(seed),
+             "--layers", str(layers), "--metrics-out", f.name],
             env=env, capture_output=True, text=True)
         assert out.returncode == 0, out.stderr[-2000:]
         hist = json.load(f)
@@ -45,8 +47,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--counts", type=int, nargs="+", default=[1, 2, 4])
     ap.add_argument("--layouts", nargs="*", default=[],
-                    help="dpxpp pipeline layouts (e.g. 4x1 2x2); device "
-                         "count is dp*pp, accum is max(2, pp)")
+                    help="dp x pp (x interleave) pipeline layouts — "
+                         "'4x1', '2x2', '2x2x2' (= dp2_pp2_v2), "
+                         "'1x4x2' (= dp1_pp4_v2); device count is dp*pp, "
+                         "accum is max(2, pp), layers pad to pp*v")
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default="/tmp/repro_scaling.json")
@@ -63,17 +67,29 @@ def main():
               f"{base / r['wall_s']:.2f}x  final_loss {r['final_loss']:.4f}")
 
     if args.layouts:
-        print("\n== dp x pp pipeline layouts (1F1B, fixed global batch) ==")
+        from repro.core.pipeline import simulated_bubble_fraction
+        print("\n== dp x pp (x v) pipeline layouts (1F1B, fixed global "
+              "batch) ==")
         ref_loss = None
         for layout in args.layouts:
-            dp, pp = (int(x) for x in layout.split("x"))
+            parts = [int(x) for x in layout.split("x")]
+            (dp, pp), v = parts[:2], parts[2] if len(parts) > 2 else 1
             accum = max(2, pp)
+            # the smoke config's 2-layer stack only splits into pp*v
+            # chunks when that divides it — pad the stack otherwise
+            layers = pp * v if pp * v > 2 else 0
             r = run_train(dp * pp, args.batch, pp=pp, accum=accum,
-                          seed=args.seed)
-            results[f"dp{dp}_pp{pp}"] = r["wall_s"]
+                          interleave=v, layers=layers, seed=args.seed)
+            name = f"dp{dp}_pp{pp}" + (f"_v{v}" if v > 1 else "")
+            results[name] = r["wall_s"]
+            # bubble read off the (interleaved) schedule simulator, not
+            # the flat analytic formula — they differ once v > 1
+            bubble = simulated_bubble_fraction(accum, pp, v) \
+                if pp > 1 else 0.0
+            results[f"{name}_bubble"] = bubble
             ref_loss = r["final_loss"] if ref_loss is None else ref_loss
             drift = abs(r["final_loss"] - ref_loss)
-            print(f"  dp{dp} x pp{pp}: {r['wall_s']:6.1f}s  "
+            print(f"  {name}: {r['wall_s']:6.1f}s  bubble {bubble:.3f}  "
                   f"final_loss {r['final_loss']:.4f} "
                   f"(|Δ| vs first layout {drift:.1e})")
 

@@ -190,8 +190,11 @@ class EngineConfig:
     expert_parallel: bool = True
     # pipeline parallelism over the `pipe` mesh axis (core/pipeline.py):
     # 1F1B microbatch schedule; microbatches come from
-    # gradient_accumulation_steps, so accum >= pipeline_stages is required
+    # gradient_accumulation_steps, so accum >= pipeline_stages is required.
+    # pipeline_interleave = v virtual stage-chunks per device (Megatron
+    # interleaved 1F1B); v > 1 additionally requires accum % stages == 0
     pipeline_stages: int = 1
+    pipeline_interleave: int = 1
     cast_params_bf16: bool = False      # §Perf: bf16 gather, f32 master
     embed_sharding: str = "vocab"       # vocab | dmodel (§Perf)
     # elastic checkpointing (repro.checkpoint): cadence in optimizer steps
@@ -241,13 +244,22 @@ class EngineConfig:
                 raise ValueError(
                     "pipeline_stages > 1 does not compose with Ulysses "
                     "sequence parallelism yet")
-            if self.cast_params_bf16:
-                # AD through the tick scan accumulates stacked-param
-                # cotangents in the compute dtype; bf16 would break the
-                # fp32-accumulation policy accumulate_gradients guarantees
+        if self.pipeline_interleave < 1:
+            raise ValueError(
+                f"pipeline_interleave must be >= 1: "
+                f"{self.pipeline_interleave}")
+        if self.pipeline_interleave > 1:
+            if self.pipeline_stages <= 1:
                 raise ValueError(
-                    "pipeline_stages > 1 does not implement the "
-                    "cast_params_bf16 fp32-grad-accumulation policy")
+                    "pipeline_interleave > 1 requires pipeline_stages > 1")
+            if self.gradient_accumulation_steps % self.pipeline_stages:
+                # Megatron interleaved 1F1B groups microbatches in runs
+                # of S per chunk round
+                raise ValueError(
+                    "interleaved 1F1B needs microbatch count divisible by "
+                    "pipeline depth: gradient_accumulation_steps="
+                    f"{self.gradient_accumulation_steps} % pipeline_stages="
+                    f"{self.pipeline_stages} != 0")
         if self.ckpt_every < 0:
             raise ValueError(
                 f"ckpt_every must be >= 0 (0 = end-of-run only): "

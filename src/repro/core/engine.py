@@ -125,13 +125,6 @@ class DistributedEngine:
                     f"multiple of the dataset's native "
                     f"{preproc.native_resolution}px grid — the on-device "
                     f"upsample is nearest-neighbor by integer factors")
-        if self.aug is not None and ecfg.pipeline_stages > 1:
-            # pipelined_loss is deterministic-only (no per-microbatch rng
-            # stream through the AD-through-scan 1F1B schedule)
-            raise ValueError(
-                "on-device augmentation needs per-microbatch rngs, which "
-                "the 1F1B pipeline path does not thread; run augmented "
-                "training with pipeline_stages=1")
         if self.aug is not None and cfg.arch_type != "vit":
             raise ValueError(
                 f"image augmentation only applies to vit archs, not "
@@ -144,7 +137,11 @@ class DistributedEngine:
         ecfg.validate(self.dp_world)
         if ecfg.pipeline_stages > 1:
             pipe.check_supported(cfg)
-            pipe.stage_partition(cfg.num_layers, ecfg.pipeline_stages)
+            # interleaved 1F1B places v chunks per device, so the stack
+            # must split into S*v equal contiguous chunks
+            pipe.stage_partition(
+                cfg.num_layers,
+                ecfg.pipeline_stages * ecfg.pipeline_interleave)
             ext = dict(zip(mesh.axis_names, mesh.devices.shape))
             if ext.get(pipe.PIPE_AXIS, 1) != ecfg.pipeline_stages:
                 raise ValueError(
@@ -302,12 +299,15 @@ class DistributedEngine:
             # leading stage axis the (B,S,D) hints don't describe; GSPMD
             # infers layouts from the pipe/dp constraints instead. ZeRO
             # still composes: grads get the same dp-sharded constraint.
-            # (No per-microbatch rngs: the AD-through-scan pipeline is
-            # deterministic-only — see pipelined_loss. The uint8 batch is
-            # finished on device HERE, before microbatching: the fp32
-            # upsampled copy lives only inside this jit.)
+            # The staged path threads the SAME fold_in(rng, step)
+            # per-microbatch streams as the dp path (augmentation /
+            # preprocess run per-microbatch inside the schedule), so a
+            # pp run replays the dp run's augmentation stream exactly.
+            mb_rngs = jax.random.split(
+                jax.random.fold_in(state.rng, state.step),
+                self.ecfg.gradient_accumulation_steps)
             grads, metrics = self._pipeline_grads(
-                compute_params, self._preprocess_batch(batch), gspecs)
+                compute_params, batch, gspecs, mb_rngs)
         else:
             with shardctx.use(self.hints):
                 # per-step, per-microbatch PRNG streams derived from the
@@ -366,24 +366,36 @@ class DistributedEngine:
                                   step=new_step)
         return new_state, metrics
 
-    def _pipeline_grads(self, compute_params, batch, gspecs):
-        """Mean grads + metrics via the 1F1B pipelined loss — numerically
+    def _pipeline_grads(self, compute_params, batch, gspecs, mb_rngs):
+        """Mean grads + metrics via the staged 1F1B pipeline — numerically
         interchangeable with ``accumulate_gradients`` over the same
-        microbatches (the pp-vs-dp parity invariant)."""
+        microbatches and rng streams (the pp-vs-dp parity invariant).
+
+        Uses ``pipelined_value_and_grad`` (manual per-chunk VJPs, O(S·v)
+        residual memory) rather than AD through the schedule; gradients
+        come back already accumulated in fp32. Augmentation/preprocess
+        happen per-microbatch via ``microbatch_fn`` inside the schedule,
+        so only one microbatch's fp32 image tensor is live at a time."""
         pspecs = self._pspecs(self.init_abstract()[0])
 
-        def pipe_loss(p, b):
-            return pipe.pipelined_loss(
-                self.cfg, p, b,
-                stages=self.ecfg.pipeline_stages,
-                num_micro=self.ecfg.gradient_accumulation_steps,
-                dp_axes=shd.dp_axes_of(self.mesh),
-                pipe_axis=pipe.PIPE_AXIS,
-                stack_specs=pipe.stage_stack_specs(pspecs["stack"]))
+        def microbatch_fn(mb, rng):
+            if self.aug is not None:
+                from repro.data.augment import augment_batch
+                return augment_batch(rng, mb, self.aug,
+                                     preproc=self.preproc,
+                                     resolution=self.cfg.image_size)
+            return self._preprocess_batch(mb)
 
-        (_, metrics), grads = jax.value_and_grad(
-            pipe_loss, has_aux=True)(compute_params, batch)
-        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        (_, metrics), grads = pipe.pipelined_value_and_grad(
+            self.cfg, compute_params, batch,
+            stages=self.ecfg.pipeline_stages,
+            num_micro=self.ecfg.gradient_accumulation_steps,
+            interleave=self.ecfg.pipeline_interleave,
+            dp_axes=shd.dp_axes_of(self.mesh),
+            pipe_axis=pipe.PIPE_AXIS,
+            stack_specs=pipe.stage_stack_specs(pspecs["stack"]),
+            rngs=mb_rngs,
+            microbatch_fn=microbatch_fn)
         return _constrain_tree(grads, gspecs), metrics
 
     def jit_train_step(self, batch_shapes=None, donate=True):

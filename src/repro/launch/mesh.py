@@ -34,7 +34,10 @@ def make_local_mesh(model: int = 1, pipe: int = 1):
     unless a subprocess sets xla_force_host_platform_device_count).
 
     ``pipe > 1`` inserts the pipeline axis between data and model:
-    ("data", "pipe", "model") — dp extent is whatever remains."""
+    ("data", "pipe", "model") — dp extent is whatever remains. The pipe
+    extent is the number of physical pipeline devices S; interleaved
+    virtual stages (EngineConfig.pipeline_interleave) subdivide each
+    device's layer range without changing the mesh."""
     n = len(jax.devices())
     assert n % (model * pipe) == 0, (n, model, pipe)
     if pipe > 1:

@@ -13,8 +13,16 @@ and multi-device integration tests run on CPU.
 stack splits into N contiguous stages over a `pipe` mesh axis carved out of
 the device grid (devices = dp x pp x model-axis), with gradient-accumulation
 microbatches fed through the pipe — so --accum must be >= N (the 1F1B
-fill/drain invariant). --pp composes with --zero (stage-local shards) but
-not with --seq-parallel.
+fill/drain invariant). The staged executor runs each stage chunk under a
+manual per-chunk VJP, keeping only O(pp) microbatch residual sets live at
+once (memory flat in --accum, unlike GPipe-style AD-through-schedule).
+--pp-interleave v places v virtual stage-chunks per device (Megatron
+interleaved 1F1B), shrinking the pipeline bubble from (S-1)/(M+S-1) to
+(S-1)/(v*M+S-1) at the cost of v-1 extra inter-device hops per microbatch;
+it needs --accum divisible by --pp and num_layers divisible by pp*v.
+--pp composes with --zero (stage-local shards), --augment (per-microbatch
+rng streams thread through the schedule), and cast_params_bf16 (fp32 grad
+accumulation per chunk), but not with --seq-parallel.
 
 --seed seeds both parameter init and the EngineConfig so distributed
 layouts are loss-trajectory comparable run-to-run.
@@ -100,6 +108,12 @@ def main():
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline stages (1F1B over the `pipe` mesh axis; "
                          "requires --accum >= --pp)")
+    ap.add_argument("--pp-interleave", type=int, default=1,
+                    help="virtual stage-chunks per pipeline device "
+                         "(Megatron interleaved 1F1B; v>1 shrinks the "
+                         "bubble to (S-1)/(v*M+S-1) and requires "
+                         "--accum %% --pp == 0 and num_layers %% "
+                         "(pp*v) == 0)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dataset", default="cifar10",
                     choices=["cifar10", "cifar100", "synthetic"],
@@ -144,6 +158,10 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="flash-attention Pallas kernels (custom-VJP train "
                          "path; interpret mode off-TPU)")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override cfg.num_layers (0 = config default; "
+                         "pipeline layouts need num_layers %% (pp * "
+                         "pp-interleave) == 0)")
     ap.add_argument("--dtype", default="",
                     help="override compute dtype (e.g. float32 for the "
                          "cross-layout resume-parity checks, where bf16 "
@@ -233,6 +251,8 @@ def main():
         cfg = cfg.replace(use_pallas=True)
     if args.dtype:
         cfg = cfg.replace(dtype=args.dtype)
+    if args.layers:
+        cfg = cfg.replace(num_layers=args.layers)
     # the data source is built BEFORE the engine: a uint8-shipping source
     # hands the engine its Preproc (the on-device normalize/upsample) and
     # its spec names the class count
@@ -256,6 +276,7 @@ def main():
         zero_stage=args.zero, optimizer=args.optimizer, lr=args.lr,
         total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
         sequence_parallel=args.seq_parallel, pipeline_stages=args.pp,
+        pipeline_interleave=args.pp_interleave,
         seed=args.seed, ckpt_every=args.ckpt_every,
         ckpt_async=not args.ckpt_sync, ckpt_keep_last=args.keep_last,
         guard_anomalies=not args.no_guard,

@@ -249,7 +249,11 @@ def test_augmented_resume_replays_stream_fast():
     fold_in(state.rng, step)), save, restore into a DIFFERENT layout:
     the resumed run replays the exact augmentation stream — per-step loss
     parity <= 1e-5 against the uninterrupted run — and the final eval
-    metrics agree (counts exactly, loss to 1e-5)."""
+    metrics agree (counts exactly, loss to 1e-5). A second resume into a
+    dp2 x pp2 layout checks the staged 1F1B path threads the SAME
+    per-microbatch rng streams (parity within the pp-vs-dp 3e-4
+    reduction-order contract — a missed augmentation replay would drift
+    at the 1e-2 scale)."""
     out = run_subprocess(_EVAL + r"""
 import tempfile
 AUG = AugmentConfig(num_classes=10)
@@ -293,6 +297,15 @@ res_eval = eng2.evaluate(s2, source().eval_batches(8))
 for k in ("eval_top1_count", "eval_top5_count", "eval_count"):
     assert res_eval[k] == ref_eval[k], (ref_eval, res_eval)
 assert abs(res_eval["eval_loss"] - ref_eval["eval_loss"]) < 1e-5
+
+# dp2 x pp2 resume: per-microbatch aug rngs thread through the staged
+# 1F1B schedule (pp reduction order admits 3e-4; a missed augmentation
+# replay would miss by ~1e-2)
+eng3 = make_engine(2, pipe=2, aug=AUG)
+s3 = eng3.restore_state(d)
+s3, tail_pp = run(eng3, s3, data(), 2, 5)
+for a, b in zip(ref[2:], tail_pp):
+    assert abs(a - b) < 3e-4, (ref, head + tail_pp)
 print("OK", ref, ref_eval["eval_top1_count"])
 """, devices=4, timeout=900)
     assert "OK" in out

@@ -134,6 +134,45 @@ def test_constrain_tree_applies_under_mesh():
 
 
 # ---------------------------------------------------------------------------
+# fp32 accumulation under bf16 compute (the cast_params_bf16 contract)
+# ---------------------------------------------------------------------------
+
+def test_accumulation_stays_fp32_under_bf16_params():
+    """accumulate_gradients must return fp32 accumulators even when the
+    compute params (and hence per-microbatch grads) are bf16."""
+    params = {"w": jnp.ones((8, 4), jnp.bfloat16)}
+    batch = {"x": jnp.ones((8, 8), jnp.bfloat16)}
+
+    def loss_fn(p, b):
+        loss = jnp.mean((b["x"] @ p["w"]) ** 2)
+        return loss.astype(jnp.bfloat16), {}
+
+    g, _ = accumulate_gradients(loss_fn, params, batch, 4)
+    assert g["w"].dtype == jnp.float32
+
+
+def test_pipeline_grads_stay_fp32_under_bf16_params():
+    """The staged 1F1B path accumulates per-chunk VJP cotangents in fp32
+    regardless of compute dtype — what makes cast_params_bf16 legal under
+    pipeline parallelism (fp32 master grads from bf16 stage compute)."""
+    from repro.configs import get_smoke_config
+    from repro.core import pipeline
+    from repro.launch.specs import concrete_batch
+    from repro.models import transformer as model
+
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=2)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    bf16 = jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+    batch = concrete_batch(cfg, 4, 32, seed=0)
+    (_, _), grads = pipeline.pipelined_value_and_grad(
+        cfg, bf16, batch, stages=2, num_micro=2, pipe_axis=None)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert g.dtype == jnp.float32, jax.tree_util.keystr(path)
+
+
+# ---------------------------------------------------------------------------
 # per-microbatch rng threading (the TrainState rng plumbing)
 # ---------------------------------------------------------------------------
 

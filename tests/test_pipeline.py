@@ -81,6 +81,58 @@ def test_bubble_fraction():
 
 
 # ---------------------------------------------------------------------------
+# interleaved (Megatron virtual-stage) schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("micro,stages", [(4, 2), (8, 4), (6, 3)])
+def test_interleaved_recovers_flat_at_v1(micro, stages):
+    assert pipeline.one_f_one_b(micro, stages, interleave=1) == \
+        pipeline.one_f_one_b(micro, stages)
+
+
+@pytest.mark.parametrize("micro,stages,v", [(4, 2, 2), (8, 2, 3), (8, 4, 2),
+                                            (12, 4, 2), (6, 3, 4)])
+def test_interleaved_hits_megatron_ideal(micro, stages, v):
+    """The greedy simulator achieves the interleaved-1F1B ideal exactly:
+    makespan 2*v*M + 2*(S-1) unit slots, bubble (S-1)/(v*M + S-1)."""
+    sched = pipeline.one_f_one_b(micro, stages, interleave=v)
+    assert pipeline.makespan(sched) == 2 * v * micro + 2 * (stages - 1)
+    assert pipeline.simulated_bubble_fraction(micro, stages, v) == \
+        pytest.approx((stages - 1) / (v * micro + stages - 1))
+
+
+@pytest.mark.parametrize("micro,stages,v", [(4, 2, 2), (8, 4, 2)])
+def test_interleaved_task_coverage_and_placement(micro, stages, v):
+    """Every (chunk, micro) F and B runs exactly once, on device
+    chunk % S, with B strictly after F."""
+    sched = pipeline.one_f_one_b(micro, stages, interleave=v)
+    seen = {}
+    for d in range(stages):
+        for t, task in enumerate(sched[d]):
+            if task is None:
+                continue
+            assert task.chunk % stages == d, (d, task)
+            key = (task.kind, task.chunk, task.micro)
+            assert key not in seen, key
+            seen[key] = t
+    for c in range(stages * v):
+        for m in range(micro):
+            assert seen[("B", c, m)] > seen[("F", c, m)], (c, m)
+    assert len(seen) == 2 * stages * v * micro
+
+
+def test_interleaved_rejects_non_divisible_micro():
+    with pytest.raises(ValueError, match="divisible by stages"):
+        pipeline.one_f_one_b(6, 4, interleave=2)
+
+
+def test_simulated_bubble_fraction_matches_flat_formula():
+    for m, s in [(4, 2), (8, 4), (16, 4)]:
+        assert pipeline.simulated_bubble_fraction(m, s, 1) == \
+            pytest.approx(pipeline.bubble_fraction(m, s))
+
+
+# ---------------------------------------------------------------------------
 # partitioning / config validation
 # ---------------------------------------------------------------------------
 
@@ -121,11 +173,29 @@ def test_unsupported_archs_rejected():
     pipeline.check_supported(get_smoke_config("qwen2.5-14b"))
 
 
-def test_engine_config_pp_rejects_bf16_cast():
+def test_engine_config_pp_accepts_bf16_cast():
+    """Per-chunk manual VJPs accumulate cotangents in fp32 regardless of
+    compute dtype, so bf16 gather + fp32 master is legal under pp now."""
     ecfg = EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
                         pipeline_stages=2, cast_params_bf16=True)
-    with pytest.raises(ValueError, match="fp32-grad-accumulation"):
-        ecfg.validate(2)
+    ecfg.validate(2)
+
+
+def test_engine_config_interleave_validation():
+    ok = EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
+                      pipeline_stages=2, pipeline_interleave=2)
+    ok.validate(2)
+    with pytest.raises(ValueError, match="pipeline_interleave must be"):
+        EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
+                     pipeline_stages=2,
+                     pipeline_interleave=0).validate(2)
+    with pytest.raises(ValueError, match="requires pipeline_stages"):
+        EngineConfig(train_batch_size=16, gradient_accumulation_steps=4,
+                     pipeline_interleave=2).validate(4)
+    with pytest.raises(ValueError, match="divisible by"):
+        # M=3 not a multiple of S=2: Megatron grouping needs runs of S
+        EngineConfig(train_batch_size=12, gradient_accumulation_steps=3,
+                     pipeline_stages=2, pipeline_interleave=2).validate(2)
 
 
 # ---------------------------------------------------------------------------
@@ -150,14 +220,90 @@ def test_pipelined_loss_matches_reference(arch, rng):
     assert set(metrics) == set(ref_metrics)
 
     gref = jax.grad(lambda p: model.loss_fn(cfg, p, batch)[0])(params)
-    gpipe = jax.jit(jax.grad(
-        lambda p: pipeline.pipelined_loss(
-            cfg, p, batch, stages=2, num_micro=4, pipe_axis=None)[0]))(params)
+    (loss2, _), gpipe = jax.jit(
+        lambda p, b: pipeline.pipelined_value_and_grad(
+            cfg, p, b, stages=2, num_micro=4, pipe_axis=None))(params, batch)
+    np.testing.assert_allclose(np.asarray(loss2), np.asarray(ref_loss),
+                               atol=2e-5)
     for (path, a), (_, b) in zip(
             jax.tree_util.tree_flatten_with_path(gref)[0],
             jax.tree_util.tree_flatten_with_path(gpipe)[0]):
+        assert b.dtype == jnp.float32   # fp32 accumulation policy
         err = np.max(np.abs(np.asarray(a) - np.asarray(b)))
         assert err < 1e-4, (jax.tree_util.keystr(path), err)
+
+
+def test_interleaved_value_and_grad_matches_reference(rng):
+    """Single-device semantics of the interleaved executor (S=2, v=2):
+    loss and fp32-accumulated grads match the reference model."""
+    from repro.launch.specs import concrete_batch
+    from repro.models import transformer as model
+
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
+    params = model.init_params(cfg, rng)
+    batch = concrete_batch(cfg, 8, 32, seed=0)
+    ref_loss, _ = model.loss_fn(cfg, params, batch)
+    gref = jax.grad(lambda p: model.loss_fn(cfg, p, batch)[0])(params)
+
+    (loss, metrics), grads = jax.jit(
+        lambda p, b: pipeline.pipelined_value_and_grad(
+            cfg, p, b, stages=2, num_micro=4, interleave=2,
+            pipe_axis=None))(params, batch)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(ref_loss),
+                               atol=2e-5)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(gref)[0],
+            jax.tree_util.tree_flatten_with_path(grads)[0]):
+        err = np.max(np.abs(np.asarray(a) - np.asarray(b)))
+        assert err < 1e-4, (jax.tree_util.keystr(path), err)
+
+
+def test_executed_schedule_matches_simulator_accounting(rng):
+    """Acceptance invariant: the executed schedule's per-device F/B/idle
+    slot counts and makespan equal the simulator's accounting — for both
+    the flat and interleaved schedules (execution is schedule-driven, and
+    this pins the coupling)."""
+    from repro.launch.specs import concrete_batch
+    from repro.models import transformer as model
+
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=4)
+    params = model.init_params(cfg, rng)
+    batch = concrete_batch(cfg, 4, 32, seed=0)
+    for stages, v, micro in [(2, 1, 4), (2, 2, 4), (4, 1, 4)]:
+        out = {}
+        pipeline.pipelined_value_and_grad(
+            cfg, params, batch, stages=stages, num_micro=micro,
+            interleave=v, pipe_axis=None, schedule_out=out)
+        ref = pipeline.schedule_accounting(micro, stages, v)
+        assert out["ticks"] == ref["ticks"], (stages, v)
+        assert out["executed"] == {"F": ref["F"], "B": ref["B"],
+                                   "idle": ref["idle"]}, (stages, v)
+
+
+def test_pipelined_rngs_thread_per_microbatch(rng):
+    """The staged path delivers microbatch m ITS rng: a microbatch_fn that
+    scales images by uniform(rng) changes the loss exactly as the same
+    transformation applied microbatch-by-microbatch outside the pipe."""
+    from repro.launch.specs import concrete_batch
+    from repro.models import transformer as model
+    from repro.core.grad_accum import split_microbatches
+
+    cfg = get_smoke_config("vit-b16").replace(dtype="float32", num_layers=2)
+    params = model.init_params(cfg, rng)
+    batch = concrete_batch(cfg, 8, 32, seed=0)
+    rngs = jax.random.split(jax.random.PRNGKey(3), 4)
+
+    def mb_fn(mb, r):
+        return dict(mb, images=mb["images"] * jax.random.uniform(r, ()))
+
+    loss, _ = pipeline.pipelined_loss(
+        cfg, params, batch, stages=2, num_micro=4, pipe_axis=None,
+        rngs=rngs, microbatch_fn=mb_fn)
+    mbs = split_microbatches(batch, 4)
+    want = np.mean([float(model.loss_fn(
+        cfg, params, mb_fn(jax.tree.map(lambda x: x[i], mbs), rngs[i]))[0])
+        for i in range(4)])
+    np.testing.assert_allclose(float(loss), want, atol=2e-5)
 
 
 def test_pipelined_loss_rejects_underfilled_pipe(rng):
@@ -183,13 +329,16 @@ from repro.core.engine import DistributedEngine
 from repro.launch.mesh import make_local_mesh
 from repro.launch.specs import concrete_batch
 
-def run_steps(arch, pp, zero=0, steps=3, accum=4, layers=4):
+def run_steps(arch, pp, zero=0, steps=3, accum=4, layers=4, interleave=1,
+              cast_bf16=False):
     mesh = make_local_mesh(model=1, pipe=pp)
     cfg = get_smoke_config(arch).replace(dtype="float32",
                                          num_layers=layers)
     ecfg = EngineConfig(train_batch_size=32, gradient_accumulation_steps=accum,
                         zero_stage=zero, lr=1e-3, total_steps=10,
-                        warmup_steps=1, pipeline_stages=pp)
+                        warmup_steps=1, pipeline_stages=pp,
+                        pipeline_interleave=interleave,
+                        cast_params_bf16=cast_bf16)
     eng = DistributedEngine(cfg, ecfg, mesh)
     state = eng.init_state(seed=0)
     step = eng.jit_train_step(donate=False)
@@ -216,6 +365,36 @@ for pp in (2, 4):
         assert abs(a - b) < 3e-4, (pp, base, lp)
 print("OK", base)
 """ % (arch, arch), devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_pp_interleaved_vs_dp_loss_trajectory_8dev():
+    """Acceptance: interleaved pp=2 and pp=4 (v=2 virtual chunks per
+    device) match the dp-only trajectory within 3e-4 over 3 steps."""
+    out = run_subprocess(_PP_COMMON + r"""
+base = run_steps("vit-b16", 1, layers=8)
+for pp in (2, 4):
+    lp = run_steps("vit-b16", pp, layers=8, interleave=2)
+    for a, b in zip(base, lp):
+        assert abs(a - b) < 3e-4, (pp, base, lp)
+print("OK", base)
+""", devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_pp_bf16_cast_trajectory_8dev():
+    """cast_params_bf16 under pp=2 tracks the dp bf16-cast trajectory —
+    the per-chunk VJP path keeps fp32 master grads (looser tol: bf16
+    compute)."""
+    out = run_subprocess(_PP_COMMON + r"""
+base = run_steps("vit-b16", 1, cast_bf16=True)
+lp = run_steps("vit-b16", 2, cast_bf16=True)
+for a, b in zip(base, lp):
+    assert abs(a - b) < 3e-3, (base, lp)
+print("OK", base)
+""", devices=8)
     assert "OK" in out
 
 

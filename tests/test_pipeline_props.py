@@ -1,0 +1,121 @@
+"""Property tests for the 1F1B schedule simulator (core/pipeline.py) —
+flat and Megatron-interleaved: in-flight residual bounds (the memory
+invariant the staged executor's residual store relies on), makespan
+monotonicity in the interleave factor, and flat-schedule recovery at v=1.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import pipeline
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+# (S, M multiple of S) grids small enough to simulate fast
+stages_st = st.sampled_from([2, 3, 4])
+mult_st = st.integers(1, 4)
+v_st = st.sampled_from([1, 2, 3, 4])
+
+
+def in_flight_trace(sched, dev):
+    """Per-tick count of live residual sets on ``dev`` (F acquires one
+    microbatch's chunk-input residual, B releases it)."""
+    live, trace = 0, []
+    for task in sched[dev]:
+        if task is not None:
+            live += 1 if task.kind == "F" else -1
+        trace.append(live)
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# in-flight residual bounds
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(stages=stages_st, mult=st.integers(1, 6))
+def test_flat_in_flight_bounded_by_stages(stages, mult):
+    """v=1 keeps the strict 1F1B cap: device d never holds more than
+    S - d in-flight residual sets, independent of M."""
+    micro = stages * mult
+    sched = pipeline.one_f_one_b(micro, stages, interleave=1)
+    for d in range(stages):
+        assert max(in_flight_trace(sched, d)) <= stages - d, (d, micro)
+
+
+@settings(**SETTINGS)
+@given(stages=stages_st, mult=mult_st, v=st.sampled_from([2, 3, 4]))
+def test_interleaved_in_flight_bounded_by_warmup(stages, mult, v):
+    """Interleaved: per-device in-flight residuals never exceed the
+    warmup depth + 1 = min(2*(S-d-1) + (v-1)*S, v*M) + 1 — flat in M,
+    which is what makes the staged executor memory-bounded."""
+    micro = stages * mult
+    sched = pipeline.one_f_one_b(micro, stages, interleave=v)
+    for d in range(stages):
+        cap = min(2 * (stages - d - 1) + (v - 1) * stages,
+                  v * micro) + 1
+        assert max(in_flight_trace(sched, d)) <= cap, (d, micro, v)
+
+
+@settings(**SETTINGS)
+@given(stages=stages_st, mult=mult_st, v=v_st)
+def test_in_flight_never_negative_and_drains(stages, mult, v):
+    """No backward fires before its forward, and every residual is
+    released by the end of the schedule."""
+    micro = stages * mult
+    sched = pipeline.one_f_one_b(micro, stages, interleave=v)
+    for d in range(stages):
+        trace = in_flight_trace(sched, d)
+        assert min(trace) >= 0, (d, micro, v)
+        assert trace[-1] == 0, (d, micro, v)
+
+
+# ---------------------------------------------------------------------------
+# makespan / bubble monotonicity
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(stages=stages_st, mult=mult_st)
+def test_normalized_makespan_monotone_in_v(stages, mult):
+    """One interleaved slot is 1/v of a flat slot, so makespan/v is the
+    comparable wall-clock: it must be non-increasing in v (more virtual
+    chunks never lengthen the pipeline)."""
+    micro = stages * mult
+    norms = [pipeline.makespan(pipeline.one_f_one_b(
+        micro, stages, interleave=v)) / v for v in (1, 2, 3, 4)]
+    for a, b in zip(norms, norms[1:]):
+        assert b <= a + 1e-9, norms
+
+
+@settings(**SETTINGS)
+@given(stages=stages_st, mult=mult_st, v=v_st)
+def test_bubble_fraction_shrinks_toward_interleaved_ideal(stages, mult, v):
+    micro = stages * mult
+    frac = pipeline.simulated_bubble_fraction(micro, stages, v)
+    assert frac == pytest.approx(
+        (stages - 1) / (v * micro + stages - 1))
+
+
+# ---------------------------------------------------------------------------
+# v=1 equivalence
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(stages=stages_st, mult=st.integers(1, 6))
+def test_flat_recovered_at_v1(stages, mult):
+    micro = stages * mult
+    assert pipeline.one_f_one_b(micro, stages, interleave=1) == \
+        pipeline.one_f_one_b(micro, stages)
+
+
+@settings(**SETTINGS)
+@given(stages=stages_st, mult=mult_st, v=v_st)
+def test_accounting_consistent(stages, mult, v):
+    """F == B == v*M slots per device and F + B + idle == ticks."""
+    micro = stages * mult
+    acc = pipeline.schedule_accounting(micro, stages, v)
+    for d in range(stages):
+        assert acc["F"][d] == v * micro
+        assert acc["B"][d] == v * micro
+        assert acc["F"][d] + acc["B"][d] + acc["idle"][d] == acc["ticks"]
