@@ -8,10 +8,14 @@ bytes (params + opt state + inputs) for ZeRO 0-3 on the 256-chip mesh.
 CI artifact next to the resume-parity check): per stage, a subprocess with
 8 host devices trains one step of the smoke ViT, saves the full TrainState
 shard-locally, and reports total bytes plus the max bytes any one device
-owns — the per-rank write cost a multi-host run would pay. ZeRO > 0
-shrinks the max-per-device column (optimizer state, and at stage 3 the
-params, spread over dp) while the total stays at logical size — the
-no-hidden-all-gather invariant of repro.checkpoint.
+owns — the per-rank write cost a multi-host run would pay. It then
+repeats the save as a SIMULATED 2-process run (the v2 merge-barrier
+protocol: per-process staging + manifests, process-0 merge/commit) and
+reports the max per-process restore bytes from the merged manifest — what
+the lazy shard-overlap restore would read on the worse host. ZeRO > 0
+shrinks the max-per-device and restore/proc columns (optimizer state, and
+at stage 3 the params, spread over dp) while the total stays at logical
+size — the no-hidden-all-gather invariant of repro.checkpoint.
 """
 import argparse
 import json
@@ -41,12 +45,26 @@ with mesh:
 d = tempfile.mkdtemp()
 eng.save_state(d, state)
 rep = checkpoint_size_report(d, 1)
+# repeat as a simulated 2-process save (merge-barrier commit) and account
+# what the lazy restore would read per host from the merged manifest
+import repro.checkpoint as ck
+d2 = tempfile.mkdtemp()
+step = int(jax.device_get(state.step))
+with ck.simulate_processes(1, 2):       # process 0 commits, so it saves last
+    ck.save_checkpoint(d2, step, state)
+with ck.simulate_processes(0, 2):
+    ck.save_checkpoint(d2, step, state)
+rep2 = checkpoint_size_report(d2, step)
+assert rep2["saved_bytes"] == rep2["logical_bytes"]
+restore = ck.per_process_restore_bytes(d2, step)
 print("CKPT_JSON " + json.dumps({
     "zero": zero, "logical": rep["logical_bytes"],
     "saved": rep["saved_bytes"],
     "max_dev": max(rep["per_device_bytes"].values()),
     "devices": len(rep["per_device_bytes"]),
-    "files": sum(rep["file_bytes"].values())}))
+    "files": sum(rep["file_bytes"].values()),
+    "restore_proc": max(restore.values()),
+    "sim_processes": len(restore)}))
 """
 
 
@@ -56,9 +74,11 @@ def ckpt_sizes(devices: int = 8):
     from benchmarks.common import child_env
 
     print(f"Checkpoint size per ZeRO stage — vit-b16 smoke TrainState, "
-          f"{devices} host devices (shard-local elastic format)\n")
+          f"{devices} host devices (shard-local elastic v2 format; "
+          f"restore/proc from a simulated 2-process merged manifest)\n")
     print(f"{'stage':>6s} {'logical MiB':>12s} {'saved MiB':>10s} "
-          f"{'max/dev MiB':>12s} {'owning devs':>12s}")
+          f"{'max/dev MiB':>12s} {'owning devs':>12s} "
+          f"{'restore/proc MiB':>17s}")
     ok = True
     for stage in (0, 1, 2, 3):
         r = subprocess.run(
@@ -75,7 +95,7 @@ def ckpt_sizes(devices: int = 8):
         mib = 2 ** 20
         print(f"{stage:6d} {rec['logical']/mib:12.2f} "
               f"{rec['saved']/mib:10.2f} {rec['max_dev']/mib:12.2f} "
-              f"{rec['devices']:12d}")
+              f"{rec['devices']:12d} {rec['restore_proc']/mib:17.2f}")
         assert rec["saved"] == rec["logical"], \
             f"stage {stage}: saved {rec['saved']} != logical " \
             f"{rec['logical']} (replica written twice or shard missing)"

@@ -1,27 +1,60 @@
-"""Elastic sharded checkpointing: shard-local saves + layout-resharding
-restore (the DeepSpeed ZeRO-partitioned-checkpoint contract).
+"""Elastic sharded checkpointing: shard-local saves + shard-overlap lazy
+restore (the DeepSpeed ZeRO-partitioned-checkpoint contract), multi-host
+correct.
 
-Format — one directory per step, committed by atomic rename:
+Format ``repro-elastic-ckpt/v2`` — one directory per step, committed by a
+single atomic rename performed by process 0:
 
     step_00000010/
-      manifest.json        logical metadata + shard index maps
+      manifest.json        merged manifest: union of every process's shards
+      manifest-p00.json    process 0's per-process manifest (kept for audit)
+      manifest-p01.json    process 1's per-process manifest
       shards-p00.npz       process 0's unique addressable shards (raw bytes)
+      shards-p01.npz       process 1's unique addressable shards
 
 Save is **shard-local**: each process iterates its arrays'
 ``addressable_shards`` and writes only shards with ``replica_id == 0`` —
-replicated leaves are written exactly once, ZeRO/pp-sharded leaves
-contribute exactly their partition, and nothing is ever gathered across
-hosts, so per-process bytes stay at shard size. The manifest records, per
-logical leaf: dtype, logical shape, the PartitionSpec it was saved under,
-and for every shard its ``[start, stop)`` index ranges plus the owning
-device id — enough to reassemble the logical array under ANY target
-layout (and to account bytes-per-device; see
-``scripts/zero_memory_table.py --ckpt-sizes``).
+replicated leaves are written exactly once (by whichever process owns
+replica 0), ZeRO/pp-sharded leaves contribute exactly their partition, and
+nothing is ever gathered across hosts, so per-process bytes stay at shard
+size. Host/scalar leaves (step counters, rng) are owned by process 0 only.
+The manifest records, per logical leaf: dtype, logical shape, the
+PartitionSpec it was saved under, and for every shard its ``[start, stop)``
+index ranges plus the owning device id and process — enough to reassemble
+the logical array under ANY target layout (and to account bytes per device
+and per process; see ``scripts/zero_memory_table.py --ckpt-sizes``).
 
-Restore is **elastic**: logical arrays are reassembled from the shard
-index maps and ``device_put`` against the TARGET shardings (the restoring
-engine's param/opt specs, including a pipe-sharded stacked-layer L axis),
-so a run saved at dp=8 restores into dp=2×pp=2 or dp=4×zero=3 unchanged.
+Commit protocol (the merge barrier):
+
+1. every process stages into its own private ``step_N.tmp-pNN/`` dir —
+   shard npz first, then ``manifest-pNN.json`` written atomically LAST, so
+   the per-process manifest's presence marks that stage as complete;
+2. process 0 waits (bounded by ``MERGE_BARRIER_TIMEOUT``; raises
+   :class:`CheckpointBarrierTimeout` naming the stragglers) until all
+   ``processes`` per-process manifests exist;
+3. process 0 merges them (:func:`merge_manifests`), validating that every
+   leaf's shard union covers its logical element count EXACTLY — the
+   ``saved_bytes == logical_bytes`` invariant: an under-covered leaf means
+   a lost shard, an over-covered one means duplicate ownership (e.g. a
+   host leaf written by more than one process);
+4. process 0 moves every stage's files into ``step_N.tmp``, writes the
+   merged ``manifest.json``, and performs the ONE ``os.rename`` commit —
+   no other process ever touches the shared final path, so there is no
+   rmtree/rename race.
+
+Restore is **elastic and lazy**: for each leaf the target sharding's
+``addressable_devices_indices_map`` gives this host's local partition;
+only manifest shards whose index ranges INTERSECT that partition are read
+from disk (per-member, checksum-verified), assembled into per-device
+blocks, and combined with ``jax.make_array_from_single_device_arrays`` —
+per-host restore memory and IO are O(local partition), not O(logical
+model). A run saved at dp=8 restores into dp=2×pp=2 or dp=4×zero=3
+unchanged. With ``shardings=None`` the full logical arrays are assembled
+on host (numpy) instead. :func:`last_restore_stats` reports
+logical/read/partition bytes and shard-entry counters for the most recent
+restore; :func:`restore_local_shards` exposes the per-process lazy plan
+directly (the multi-host simulation/test surface).
+
 Template mismatches are never tolerated: missing/unexpected leaf paths
 raise ``KeyError`` naming them, shape/dtype mismatches raise ``ValueError``
 with both sides printed, and incomplete shard coverage raises.
@@ -38,27 +71,41 @@ Hardened IO (the resilience layer — ROADMAP "Resilience"):
   shard it reads and raises :class:`CheckpointCorruptError` on mismatch
   (or on an unreadable shard file) instead of silently loading garbage;
 * save IO retries transient ``OSError``s with jittered-exponential
-  backoff (`repro.resilience.backoff`) — the tmp-dir staging is
-  idempotent, so a half-written attempt is simply rebuilt;
+  backoff (`repro.resilience.backoff`) — the per-process staging is
+  idempotent, so a half-written attempt is simply rebuilt. A merge
+  barrier timeout is a :class:`CheckpointBarrierTimeout` (RuntimeError,
+  deliberately NOT an OSError) so the IO retry never re-runs a full
+  barrier wait;
+* npz handles are opened through a closing cache (:class:`_NpzCache`) —
+  a ``restore_latest_valid`` fallback scan over many torn steps holds no
+  leaked fds;
 * :func:`restore_latest_valid` falls back to the **newest valid earlier
   step** when the latest is torn or corrupt, and :func:`latest_step`
-  skips manifest-less and ``*.tmp`` directories instead of tripping;
+  skips manifest-less and ``*.tmp*`` directories instead of tripping;
 * :func:`gc_checkpoints` retains the newest ``keep_last_k`` steps but
-  NEVER deletes the newest step that verifies — a retention policy
-  cannot be allowed to destroy the only restorable state.
+  NEVER deletes the newest step that verifies — and reports only steps
+  whose removal actually succeeded (a failed rmtree is warned about and
+  excluded, so retention accounting is truthful). GC runs on process 0
+  only.
 
-Multi-host caveat (single-controller repo): every process would write its
-own ``shards-p{NN}.npz`` but the manifest is written by process 0 from its
-local shard table; a true multi-host deployment needs a manifest merge
-barrier. On this repo's single-process meshes the manifest is complete.
+Multi-host simulation: :func:`simulate_processes` patches the process
+index/count and the device→process mapping seen by save/restore, so a
+single-controller test can produce genuine per-process staged saves, merge
+them, and restore per-process partitions — see
+``tests/test_multihost_ckpt.py`` and the ``multihost-ckpt`` CI job.
+Legacy ``repro-elastic-ckpt/v1`` checkpoints remain restorable (their
+single merged manifest is read as-is).
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import json
 import os
 import re
 import shutil
 import threading
+import time
 import zlib
 from typing import Optional, Tuple
 
@@ -70,7 +117,8 @@ from repro.core import sharding as shd
 from repro.resilience import faults as _faults
 from repro.resilience.backoff import BackoffPolicy
 
-FORMAT = "repro-elastic-ckpt/v1"
+FORMAT = "repro-elastic-ckpt/v2"
+LEGACY_FORMATS = ("repro-elastic-ckpt/v1",)
 
 # save-side IO retry: a handful of quick attempts — a checkpoint that
 # cannot land within this budget is a real outage, not a blip
@@ -78,11 +126,75 @@ DEFAULT_IO_BACKOFF = BackoffPolicy(max_attempts=4, base_delay=0.05,
                                    multiplier=2.0, max_delay=1.0,
                                    jitter=0.5)
 
+# merge barrier: how long process 0 waits for every per-process manifest
+# before declaring the save torn (module attribute so tests can tighten it)
+MERGE_BARRIER_TIMEOUT = 120.0
+_BARRIER_POLL = 0.05
+
 
 class CheckpointCorruptError(ValueError):
     """Checkpoint bytes fail verification (checksum mismatch, unreadable
     shard file, missing manifest) — the restore-fallback trigger."""
 
+
+class CheckpointBarrierTimeout(RuntimeError):
+    """Process 0 gave up waiting for another process's per-process
+    manifest at the merge barrier. Deliberately NOT an OSError (and not
+    ``TimeoutError``, which IS one): the save-side IO retry must not
+    re-run a full barrier wait."""
+
+
+# ---------------------------------------------------------------------------
+# multi-host seams: real values in production, patchable for simulation
+# ---------------------------------------------------------------------------
+
+_SIM: Optional[tuple] = None    # (process_index, process_count, device_map)
+
+
+def _process_index() -> int:
+    return _SIM[0] if _SIM is not None else jax.process_index()
+
+
+def _process_count() -> int:
+    return _SIM[1] if _SIM is not None else jax.process_count()
+
+
+def _device_process(dev) -> int:
+    """Which process owns ``dev``. Real runs read ``device.process_index``;
+    under :func:`simulate_processes` devices are partitioned contiguously
+    by id (or by the caller's explicit mapping)."""
+    if _SIM is None:
+        return int(dev.process_index)
+    _, count, device_map = _SIM
+    if device_map is not None:
+        return int(device_map(dev))
+    return (int(dev.id) * count) // jax.device_count()
+
+
+@contextlib.contextmanager
+def simulate_processes(process_index: int, process_count: int,
+                       device_process=None):
+    """Pretend this controller is process ``process_index`` of
+    ``process_count``: save writes only that process's shard partition
+    and :func:`restore_local_shards` reads only its restore partition.
+    ``device_process(device) -> int`` overrides the default contiguous
+    device→process mapping. Test-only — never nest with live async saves
+    from a different simulated process."""
+    global _SIM
+    if not 0 <= process_index < process_count:
+        raise ValueError(
+            f"process_index {process_index} outside [0, {process_count})")
+    prev = _SIM
+    _SIM = (int(process_index), int(process_count), device_process)
+    try:
+        yield
+    finally:
+        _SIM = prev
+
+
+# ---------------------------------------------------------------------------
+# small shared helpers
+# ---------------------------------------------------------------------------
 
 def _np_dtype(name: str):
     try:
@@ -121,15 +233,77 @@ def _index_ranges(index, shape) -> list:
     return out
 
 
+def _range_count(ranges) -> int:
+    return int(np.prod([b - a for a, b in ranges]))
+
+
+def _intersect(a, b) -> Optional[tuple]:
+    """Intersection of two ``[start, stop)`` range lists, or None when
+    empty. NOTE: the scalar-leaf intersection is the empty tuple ``()``
+    (falsy but a REAL full overlap) — callers must test ``is None``."""
+    out = []
+    for (a0, a1), (b0, b1) in zip(a, b):
+        lo, hi = max(int(a0), int(b0)), min(int(a1), int(b1))
+        if lo >= hi:
+            return None
+        out.append((lo, hi))
+    return tuple(out)
+
+
+def _entry_process(entry: dict) -> int:
+    """Owning process of a manifest shard entry; legacy v1 entries carry
+    no ``process`` field, so fall back to the shard filename."""
+    if "process" in entry:
+        return int(entry["process"])
+    m = re.match(r"shards-p(\d+)\.npz$", entry.get("file", ""))
+    return int(m.group(1)) if m else 0
+
+
+class _NpzCache:
+    """Open-npz cache that CLOSES every handle deterministically — the
+    fd-leak fix: restore/verify scans over many steps must not accumulate
+    open ``NpzFile``s."""
+
+    def __init__(self, d: str):
+        self._d = d
+        self._open: dict = {}
+
+    def get(self, fname: str):
+        if fname not in self._open:
+            self._open[fname] = np.load(os.path.join(self._d, fname))
+        return self._open[fname]
+
+    def close(self):
+        files, self._open = list(self._open.values()), {}
+        for f in files:
+            try:
+                f.close()
+            except Exception:   # noqa: BLE001 — torn zip close is fine
+                pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
 # ---------------------------------------------------------------------------
 # save: snapshot (device -> host, shard-local) then write (host only)
 # ---------------------------------------------------------------------------
 
 def _snapshot(tree) -> dict:
-    """Host-side copy of every unique addressable shard (replica 0 only) —
-    the double buffer an async save serializes from. No cross-device or
-    cross-host gather happens here: one ``device_get`` per owned shard."""
-    snap = {"mesh": None, "leaves": {}}
+    """Host-side copy of every unique addressable shard this PROCESS owns
+    (replica 0 only) — the double buffer an async save serializes from.
+    No cross-device or cross-host gather happens here: one ``device_get``
+    per owned shard. Host/scalar leaves are owned by process 0 only (every
+    process claiming them would write duplicate shards and break the
+    ``saved_bytes == logical_bytes`` invariant). The process index/count
+    are captured HERE, synchronously — the async writer thread must not
+    consult the (possibly since-changed) seams."""
+    proc, procs = _process_index(), _process_count()
+    snap = {"mesh": None, "leaves": {}, "process": proc, "processes": procs}
     for key, leaf in _flatten(tree):
         if hasattr(leaf, "addressable_shards"):
             # np.array(copy=True), NOT np.asarray: on CPU backends the
@@ -139,12 +313,14 @@ def _snapshot(tree) -> dict:
             shards = [(_index_ranges(sh.index, leaf.shape),
                        np.array(sh.data, copy=True), int(sh.device.id))
                       for sh in leaf.addressable_shards
-                      if sh.replica_id == 0]
+                      if sh.replica_id == 0
+                      and _device_process(sh.device) == proc]
             desc = shd.describe_sharding(leaf)
             shape, dtype = tuple(leaf.shape), str(np.dtype(leaf.dtype))
         else:                           # host numpy / python scalar leaf
             arr = np.asarray(leaf)
-            shards = [([[0, d] for d in arr.shape], arr, 0)]
+            shards = ([([[0, d] for d in arr.shape], arr, 0)]
+                      if proc == 0 else [])
             desc, shape, dtype = None, arr.shape, str(arr.dtype)
         if desc and desc.get("mesh") and snap["mesh"] is None:
             snap["mesh"] = desc["mesh"]
@@ -155,17 +331,19 @@ def _snapshot(tree) -> dict:
 
 
 def _write_snapshot(ckpt_dir: str, step: int, snap: dict) -> str:
-    """Serialize a snapshot to ``step_{step}``: shard npz + manifest into a
-    tmp directory, then atomic rename-on-complete (readers never observe a
-    partial checkpoint; ``latest_step`` ignores ``*.tmp``). Idempotent —
-    a retried attempt rebuilds the tmp staging dir from scratch."""
+    """Serialize a snapshot into this process's PRIVATE staging dir
+    ``step_N.tmp-pNN/`` (shard npz first, per-process manifest atomically
+    last — the stage-complete marker), then, on process 0 only, run the
+    merge-barrier commit. Idempotent — a retried attempt rebuilds the
+    staging dir from scratch. No process but 0 ever touches the shared
+    final path, so there is no rmtree/rename race."""
     _faults.check("ckpt_write", step)   # chaos harness (no-op in prod)
-    proc = jax.process_index()
+    proc, procs = snap["process"], snap["processes"]
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.isdir(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    stage = f"{final}.tmp-p{proc:02d}"
+    if os.path.isdir(stage):
+        shutil.rmtree(stage)
+    os.makedirs(stage)
     shard_file = f"shards-p{proc:02d}.npz"
     arrays, leaves = {}, {}
     slot = 0
@@ -179,25 +357,164 @@ def _write_snapshot(ckpt_dir: str, step: int, snap: dict) -> str:
             arrays[k] = np.frombuffer(raw, np.uint8)
             entries.append({"file": shard_file, "key": k,
                             "shape": list(data.shape), "index": ranges,
-                            "device": dev, "crc32": zlib.crc32(raw)})
+                            "device": dev, "process": proc,
+                            "crc32": zlib.crc32(raw)})
         leaves[key] = {"dtype": meta["dtype"], "shape": meta["shape"],
                        "spec": meta["spec"], "shards": entries}
-    np.savez(os.path.join(tmp, shard_file), **arrays)
-    if proc == 0:
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"format": FORMAT, "step": step,
-                       "mesh": snap["mesh"], "leaves": leaves}, f, indent=1)
+    np.savez(os.path.join(stage, shard_file), **arrays)
+    manifest = {"format": FORMAT, "step": step, "process": proc,
+                "processes": procs, "mesh": snap["mesh"], "leaves": leaves}
+    mpath = os.path.join(stage, f"manifest-p{proc:02d}.json")
+    mtmp = mpath + ".part"
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(mtmp, mpath)             # barrier poll never sees torn JSON
+    if proc != 0:
+        return final                    # process 0 commits for everyone
+    path = _commit_step(ckpt_dir, step, procs)
+    _faults.corrupt_committed(path, step)   # chaos harness (no-op in prod)
+    return path
+
+
+def _await_manifests(ckpt_dir: str, step: int, processes: int) -> dict:
+    """Merge barrier: block until every process's ``manifest-pNN.json``
+    exists (bounded by ``MERGE_BARRIER_TIMEOUT``, read at call time so
+    tests can tighten it). Returns {process: manifest path}."""
+    paths = {
+        p: os.path.join(ckpt_dir, f"step_{step:08d}.tmp-p{p:02d}",
+                        f"manifest-p{p:02d}.json")
+        for p in range(processes)}
+    deadline = time.monotonic() + MERGE_BARRIER_TIMEOUT
+    while True:
+        missing = sorted(p for p, mp in paths.items()
+                         if not os.path.isfile(mp))
+        if not missing:
+            return paths
+        if time.monotonic() >= deadline:
+            raise CheckpointBarrierTimeout(
+                f"step {step}: timed out after {MERGE_BARRIER_TIMEOUT}s "
+                f"waiting for per-process manifests from process(es) "
+                f"{missing} of {processes} — save is torn, not committed")
+        time.sleep(_BARRIER_POLL)
+
+
+def merge_manifests(manifests: list) -> dict:
+    """Merge per-process manifests into the committed ``manifest.json``.
+
+    Validates: unique process ids covering ``0..processes-1``, identical
+    format/step, identical leaf key sets (``KeyError``), per-leaf
+    dtype/shape/spec agreement across processes, and — the
+    ``saved_bytes == logical_bytes`` invariant — that every leaf's shard
+    union covers its logical element count EXACTLY (``ValueError`` listing
+    every offender: under-coverage means a lost shard, over-coverage means
+    duplicate ownership, e.g. a host leaf written by more than one
+    process)."""
+    if not manifests:
+        raise ValueError("no per-process manifests to merge")
+    by_proc: dict = {}
+    for m in manifests:
+        p = int(m["process"])
+        if p in by_proc:
+            raise ValueError(
+                f"duplicate per-process manifest for process {p}")
+        by_proc[p] = m
+    procs = {int(m["processes"]) for m in manifests}
+    steps = {int(m["step"]) for m in manifests}
+    fmts = {m.get("format") for m in manifests}
+    if len(procs) != 1 or len(steps) != 1 or len(fmts) != 1:
+        raise ValueError(
+            f"per-process manifests disagree on processes={sorted(procs)} "
+            f"step={sorted(steps)} format={sorted(map(str, fmts))}")
+    processes, step, fmt = procs.pop(), steps.pop(), fmts.pop()
+    expected = set(range(processes))
+    if set(by_proc) != expected:
+        raise ValueError(
+            f"step {step}: per-process manifests cover processes "
+            f"{sorted(by_proc)} but the save declared {processes} "
+            f"process(es) {sorted(expected)}")
+    key_sets = {p: set(m["leaves"]) for p, m in by_proc.items()}
+    base_keys = key_sets[0]
+    for p, keys in sorted(key_sets.items()):
+        if keys != base_keys:
+            raise KeyError(
+                f"step {step}: process {p} manifest leaf keys disagree "
+                f"with process 0 — only in p{p}: "
+                f"{sorted(keys - base_keys)}; only in p0: "
+                f"{sorted(base_keys - keys)}")
+    mesh = next((m["mesh"] for _, m in sorted(by_proc.items())
+                 if m.get("mesh")), None)
+    leaves: dict = {}
+    errors = []
+    for key in sorted(base_keys):
+        metas = [(p, by_proc[p]["leaves"][key])
+                 for p in sorted(by_proc)]
+        _, base = metas[0]
+        for p, meta in metas[1:]:
+            if (meta["dtype"], meta["shape"], meta["spec"]) != (
+                    base["dtype"], base["shape"], base["spec"]):
+                errors.append(
+                    f"  {key}: process {p} disagrees with process 0 on "
+                    f"dtype/shape/spec ({meta['dtype']}/{meta['shape']}/"
+                    f"{meta['spec']} vs {base['dtype']}/{base['shape']}/"
+                    f"{base['spec']})")
+        shards = [e for _, meta in metas for e in meta["shards"]]
+        logical = int(np.prod(base["shape"]))
+        covered = sum(_range_count(e["index"]) for e in shards)
+        if covered != logical:
+            kind = ("incomplete — a process lost shards"
+                    if covered < logical else
+                    "duplicate/overlapping — e.g. a host leaf written by "
+                    "more than one process")
+            errors.append(
+                f"  {key}: merged shards cover {covered} of {logical} "
+                f"elements ({kind}); saved_bytes == logical_bytes "
+                f"invariant violated")
+        leaves[key] = {"dtype": base["dtype"], "shape": base["shape"],
+                       "spec": base["spec"], "shards": shards}
+    if errors:
+        raise ValueError(
+            f"step {step}: per-process manifest merge failed:\n"
+            + "\n".join(errors))
+    return {"format": fmt, "step": step, "processes": processes,
+            "mesh": mesh, "leaves": leaves}
+
+
+def _commit_step(ckpt_dir: str, step: int, processes: int) -> str:
+    """Process-0-only commit: await every per-process manifest, merge and
+    validate, collect all stages into one ``step_N.tmp``, write the merged
+    manifest, and atomically rename into place — the single commit point
+    that replaces the old every-process rmtree+rename race."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest_paths = _await_manifests(ckpt_dir, step, processes)
+    manifests = []
+    for p in sorted(manifest_paths):
+        with open(manifest_paths[p]) as f:
+            manifests.append(json.load(f))
+    merged = merge_manifests(manifests)
+    tmp = final + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    for p in sorted(manifest_paths):
+        stage = f"{final}.tmp-p{p:02d}"
+        for name in (f"shards-p{p:02d}.npz", f"manifest-p{p:02d}.json"):
+            src = os.path.join(stage, name)
+            if os.path.exists(src):
+                os.replace(src, os.path.join(tmp, name))
+        shutil.rmtree(stage, ignore_errors=True)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(merged, f, indent=1)
     if os.path.isdir(final):
         shutil.rmtree(final)            # re-save of the same step
     os.rename(tmp, final)
-    _faults.corrupt_committed(final, step)  # chaos harness (no-op in prod)
     return final
 
 
 def _write_with_retry(ckpt_dir: str, step: int, snap: dict,
                       retry: Optional[BackoffPolicy]) -> str:
     """Write, retrying transient IO failures (OSError) with backoff;
-    persistent failures (anything else) propagate immediately."""
+    persistent failures — including merge-validation ``ValueError``s and
+    :class:`CheckpointBarrierTimeout` — propagate immediately."""
     if retry is None:
         return _write_snapshot(ckpt_dir, step, snap)
     return retry.retry(
@@ -214,10 +531,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *,
     """Synchronous shard-local save. ``tree`` is any pytree of arrays
     (typically a full ``TrainState``). Transient IO errors are retried
     per ``retry``; ``keep_last_k`` > 0 runs retention GC after the
-    commit (never deleting the newest verifiable step)."""
+    commit (process 0 only — every process deleting shared step dirs
+    would be the same race the commit protocol just removed)."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    path = _write_with_retry(ckpt_dir, step, _snapshot(tree), retry)
-    if keep_last_k:
+    snap = _snapshot(tree)
+    path = _write_with_retry(ckpt_dir, step, snap, retry)
+    if keep_last_k and snap["process"] == 0:
         gc_checkpoints(ckpt_dir, keep_last_k)
     return path
 
@@ -236,7 +555,10 @@ class AsyncCheckpointer:
     is already broken).
 
     Background writes retry transient IO errors with ``retry`` (the
-    hardened-IO policy) and run retention GC when ``keep_last_k`` > 0.
+    hardened-IO policy) and run retention GC when ``keep_last_k`` > 0 —
+    on process 0 only, matching the commit protocol. The process identity
+    is captured at snapshot time, so a simulated-process save keeps its
+    identity even though the write happens later on the writer thread.
 
     ``close()`` drains WITHOUT raising — the stored failure is logged,
     never swallowed silently — for teardown paths where an exception is
@@ -280,7 +602,7 @@ class AsyncCheckpointer:
         def run():
             try:
                 _write_with_retry(ckpt_dir, step, snap, self._retry)
-                if self._keep_last_k:
+                if self._keep_last_k and snap["process"] == 0:
                     gc_checkpoints(ckpt_dir, self._keep_last_k)
             except BaseException as e:  # noqa: BLE001 — surfaced in wait()
                 with self._lock:
@@ -332,30 +654,102 @@ class AsyncCheckpointer:
 
 
 # ---------------------------------------------------------------------------
-# restore: strict template match, reassemble, reshard to target layout
+# restore: strict template match, lazy shard-overlap read, target layout
 # ---------------------------------------------------------------------------
 
-def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
-    """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs; values ignored), resharding to ``shardings`` when
-    given (the TARGET engine's NamedShardings — this is the elastic path).
+@dataclasses.dataclass
+class RestoreStats:
+    """Byte/entry accounting for one restore — the O(local partition)
+    contract made observable. ``read_bytes`` counts each npz member at
+    most once (members are decoded per leaf and reused across the devices
+    they overlap); ``partition_bytes`` is the host memory assembled for
+    this process's unique blocks."""
+    logical_bytes: int = 0
+    read_bytes: int = 0
+    partition_bytes: int = 0
+    entries_total: int = 0
+    entries_read: int = 0
 
-    Raises ``KeyError`` when the checkpoint and template trees disagree on
-    leaf paths, and ``ValueError`` (all offenders listed, both sides
-    printed) on any shape/dtype mismatch or incomplete shard coverage.
-    """
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+
+_LAST_RESTORE_STATS: Optional[RestoreStats] = None
+
+
+def last_restore_stats() -> Optional[RestoreStats]:
+    """Stats of the most recent :func:`restore_checkpoint` on this
+    process (None before any restore)."""
+    return _LAST_RESTORE_STATS
+
+
+class _LeafReader:
+    """Per-leaf member reader: decodes each npz member at most once
+    (checksum-verified), counts read entries/bytes, and is dropped after
+    the leaf — decoded-member memory never outlives one leaf."""
+
+    def __init__(self, d: str, cache: _NpzCache, dtype, stats: RestoreStats,
+                 context: str):
+        self._d = d
+        self._cache = cache
+        self._dtype = dtype
+        self._stats = stats
+        self._context = context
+        self._members: dict = {}
+
+    def member(self, entry: dict) -> np.ndarray:
+        mk = (entry["file"], entry["key"])
+        if mk not in self._members:
+            raw = _read_shard_bytes(self._d, entry, self._cache,
+                                    context=self._context)
+            self._stats.entries_read += 1
+            self._stats.read_bytes += len(raw)
+            self._members[mk] = np.frombuffer(
+                raw, self._dtype).reshape(entry["shape"])
+        return self._members[mk]
+
+
+def _assemble_block(key: str, meta: dict, ranges, reader: _LeafReader
+                    ) -> np.ndarray:
+    """Assemble ONE contiguous block (``[start, stop)`` per dim) of a
+    leaf from the manifest shards that intersect it — the lazy-restore
+    core: non-overlapping shards are never read."""
+    dtype = _np_dtype(meta["dtype"])
+    block = np.empty(tuple(b - a for a, b in ranges), dtype)
+    covered = 0
+    for e in meta["shards"]:
+        inter = _intersect(e["index"], ranges)
+        if inter is None:               # () is a REAL scalar overlap
+            continue
+        sub = reader.member(e)
+        src = tuple(slice(lo - a0, hi - a0)
+                    for (lo, hi), (a0, _) in zip(inter, e["index"]))
+        dst = tuple(slice(lo - r0, hi - r0)
+                    for (lo, hi), (r0, _) in zip(inter, ranges))
+        block[dst] = sub[src]
+        covered += _range_count(inter)
+    want = _range_count(ranges)
+    if covered != want:
+        raise ValueError(
+            f"leaf {key}: shards cover {covered} of {want} elements of "
+            f"block {ranges} (incomplete or overlapping shard map)")
+    return block
+
+
+def _load_manifest(d: str) -> dict:
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    if manifest.get("format") != FORMAT:
+    fmt = manifest.get("format")
+    if fmt != FORMAT and fmt not in LEGACY_FORMATS:
         raise ValueError(
-            f"checkpoint {d} has format {manifest.get('format')!r}; this "
-            f"restorer reads {FORMAT!r} — refusing to reinterpret shard "
+            f"checkpoint {d} has format {fmt!r}; this "
+            f"restorer reads {FORMAT!r} (and legacy "
+            f"{list(LEGACY_FORMATS)}) — refusing to reinterpret shard "
             f"bytes across format versions")
-    leaves_meta = manifest["leaves"]
+    return manifest
 
-    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-    like_items = [(_path_str(path), leaf) for path, leaf in flat_like]
+
+def _validate_template(d: str, leaves_meta: dict, like_items: list) -> None:
+    """The strict template contract: ``KeyError`` on leaf-path mismatch,
+    ``ValueError`` (all offenders, both sides printed) on shape/dtype
+    mismatch or incomplete logical shard coverage."""
     like_keys = [k for k, _ in like_items]
     missing = sorted(set(like_keys) - set(leaves_meta))
     unexpected = sorted(set(leaves_meta) - set(like_keys))
@@ -364,7 +758,6 @@ def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
             f"checkpoint {d} does not match the restore template — "
             f"missing from checkpoint: {missing or '[]'}; "
             f"unexpected in checkpoint: {unexpected or '[]'}")
-
     errors = []
     for key, leaf in like_items:
         meta = leaves_meta[key]
@@ -377,9 +770,7 @@ def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
                 f"  {key}: checkpoint shape={got_shape} "
                 f"dtype={got_dtype.name} vs template shape={want_shape} "
                 f"dtype={want_dtype.name}")
-        covered = sum(
-            int(np.prod([b - a for a, b in e["index"]]))
-            for e in meta["shards"])
+        covered = sum(_range_count(e["index"]) for e in meta["shards"])
         if covered != int(np.prod(got_shape)):
             errors.append(
                 f"  {key}: shards cover {covered} of "
@@ -390,35 +781,137 @@ def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
             f"checkpoint {d} incompatible with restore template:\n"
             + "\n".join(errors))
 
-    npz_cache: dict = {}
+
+def _flatten_shardings(shardings, n_leaves: int) -> list:
+    if shardings is None:
+        return [None] * n_leaves
+    flat = jax.tree_util.tree_flatten(shardings)[0]
+    if len(flat) != n_leaves:
+        raise ValueError(
+            f"shardings tree has {len(flat)} leaves but the restore "
+            f"template has {n_leaves} — the trees must align leaf-for-leaf")
+    return flat
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs; values ignored), resharding to ``shardings`` when
+    given (the TARGET engine's NamedShardings — this is the elastic path).
+
+    With shardings, the restore is LAZY: each leaf's target sharding
+    yields this process's local partition via
+    ``addressable_devices_indices_map``; only manifest shards whose index
+    ranges intersect it are read, per-device blocks are deduplicated by
+    range, and the leaf is built with
+    ``jax.make_array_from_single_device_arrays`` — per-host IO and memory
+    are O(local partition). With ``shardings=None`` full logical numpy
+    arrays are assembled instead. :func:`last_restore_stats` reports the
+    accounting either way.
+
+    Raises ``KeyError`` when the checkpoint and template trees disagree on
+    leaf paths, and ``ValueError`` (all offenders listed, both sides
+    printed) on any shape/dtype mismatch or incomplete shard coverage.
+    """
+    global _LAST_RESTORE_STATS
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = _load_manifest(d)
+    leaves_meta = manifest["leaves"]
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    like_items = [(_path_str(path), leaf) for path, leaf in flat_like]
+    _validate_template(d, leaves_meta, like_items)
+    flat_sh = _flatten_shardings(shardings, len(like_items))
+
+    stats = RestoreStats()
     out_leaves = []
-    for key, _ in like_items:
-        meta = leaves_meta[key]
-        dtype = _np_dtype(meta["dtype"])
-        out = np.zeros(tuple(meta["shape"]), dtype)
-        for e in meta["shards"]:
-            raw = _read_shard_bytes(d, e, npz_cache, context=key)
-            sub = np.frombuffer(raw, dtype).reshape(e["shape"])
-            out[tuple(slice(a, b) for a, b in e["index"])] = sub
-        out_leaves.append(out)
-    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
-    if shardings is not None:
-        # the elastic step: place each logical array against the TARGET
-        # layout's sharding — GSPMD-free resharding via device_put
-        tree = jax.tree.map(jax.device_put, tree, shardings)
-    return tree
+    with _NpzCache(d) as cache:
+        for (key, _), sharding in zip(like_items, flat_sh):
+            meta = leaves_meta[key]
+            dtype = _np_dtype(meta["dtype"])
+            shape = tuple(meta["shape"])
+            stats.logical_bytes += int(np.prod(shape)) * dtype.itemsize
+            stats.entries_total += len(meta["shards"])
+            reader = _LeafReader(d, cache, dtype, stats, key)
+            if sharding is None:
+                block = _assemble_block(
+                    key, meta, [[0, dim] for dim in shape], reader)
+                stats.partition_bytes += block.nbytes
+                out_leaves.append(block)
+                continue
+            blocks: dict = {}
+            arrays = []
+            for dev, idx in sharding.addressable_devices_indices_map(
+                    shape).items():
+                ranges = _index_ranges(idx, shape)
+                rkey = tuple(map(tuple, ranges))
+                if rkey not in blocks:  # replicated targets assemble once
+                    blocks[rkey] = _assemble_block(key, meta, ranges,
+                                                   reader)
+                    stats.partition_bytes += blocks[rkey].nbytes
+                arrays.append(jax.device_put(blocks[rkey], dev))
+            out_leaves.append(jax.make_array_from_single_device_arrays(
+                shape, sharding, arrays))
+    _LAST_RESTORE_STATS = stats
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)
 
 
-def _read_shard_bytes(d: str, entry: dict, npz_cache: dict, *,
+def restore_local_shards(ckpt_dir: str, step: int, like, shardings
+                         ) -> Tuple[dict, RestoreStats]:
+    """THIS process's lazy restore plan, materialized: for each template
+    leaf, the per-device blocks of the target sharding's partition that
+    belong to local devices (``_device_process(dev) == process_index``),
+    assembled from only the intersecting manifest shards.
+
+    Returns ``({leaf_key: [(device_id, ranges, block), ...]}, stats)``
+    where ``ranges`` is the block's ``((start, stop), ...)`` and ``block``
+    the host numpy data. This is the multi-host simulation/test surface —
+    production restores go through :func:`restore_checkpoint`, whose
+    ``addressable_devices_indices_map`` is already per-host on a real
+    multi-host runtime."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = _load_manifest(d)
+    leaves_meta = manifest["leaves"]
+    flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    like_items = [(_path_str(path), leaf) for path, leaf in flat_like]
+    _validate_template(d, leaves_meta, like_items)
+    flat_sh = _flatten_shardings(shardings, len(like_items))
+    if any(s is None for s in flat_sh):
+        raise ValueError("restore_local_shards requires target shardings")
+
+    proc = _process_index()
+    stats = RestoreStats()
+    out: dict = {}
+    with _NpzCache(d) as cache:
+        for (key, _), sharding in zip(like_items, flat_sh):
+            meta = leaves_meta[key]
+            dtype = _np_dtype(meta["dtype"])
+            shape = tuple(meta["shape"])
+            stats.logical_bytes += int(np.prod(shape)) * dtype.itemsize
+            stats.entries_total += len(meta["shards"])
+            reader = _LeafReader(d, cache, dtype, stats, key)
+            blocks: dict = {}
+            plan = []
+            for dev, idx in sharding.addressable_devices_indices_map(
+                    shape).items():
+                if _device_process(dev) != proc:
+                    continue
+                ranges = _index_ranges(idx, shape)
+                rkey = tuple(map(tuple, ranges))
+                if rkey not in blocks:
+                    blocks[rkey] = _assemble_block(key, meta, ranges,
+                                                   reader)
+                    stats.partition_bytes += blocks[rkey].nbytes
+                plan.append((int(dev.id), rkey, blocks[rkey]))
+            out[key] = plan
+    return out, stats
+
+
+def _read_shard_bytes(d: str, entry: dict, npz_cache: _NpzCache, *,
                       context: str) -> bytes:
     """One shard's raw bytes, checksum-verified against the manifest.
     Unreadable files (torn zip, IO error) and crc mismatches both raise
     :class:`CheckpointCorruptError` — the fallback-restore trigger."""
     try:
-        if entry["file"] not in npz_cache:
-            npz_cache[entry["file"]] = np.load(
-                os.path.join(d, entry["file"]))
-        raw = npz_cache[entry["file"]][entry["key"]].tobytes()
+        raw = npz_cache.get(entry["file"])[entry["key"]].tobytes()
     except Exception as e:  # noqa: BLE001 — any read failure = corrupt
         raise CheckpointCorruptError(
             f"checkpoint {d}: shard file {entry['file']!r} "
@@ -437,7 +930,7 @@ def verify_checkpoint(ckpt_dir: str, step: int) -> None:
     format, every shard file readable, every per-shard crc32 matching.
     Raises :class:`CheckpointCorruptError` (or ``FileNotFoundError`` for
     a missing manifest); returns None when the checkpoint is sound.
-    Pre-checksum (v1 manifests without ``crc32``) checkpoints pass on
+    Pre-checksum (manifests without ``crc32``) checkpoints pass on
     readability alone."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     manifest_path = os.path.join(d, "manifest.json")
@@ -449,20 +942,21 @@ def verify_checkpoint(ckpt_dir: str, step: int) -> None:
     except Exception as e:  # noqa: BLE001 — torn manifest = corrupt
         raise CheckpointCorruptError(
             f"checkpoint {d}: manifest unreadable: {e!r}") from e
-    if manifest.get("format") != FORMAT:
+    fmt = manifest.get("format")
+    if fmt != FORMAT and fmt not in LEGACY_FORMATS:
         raise CheckpointCorruptError(
-            f"checkpoint {d}: format {manifest.get('format')!r} != "
-            f"{FORMAT!r}")
-    npz_cache: dict = {}
-    for key, meta in manifest["leaves"].items():
-        for e in meta["shards"]:
-            _read_shard_bytes(d, e, npz_cache, context=key)
+            f"checkpoint {d}: format {fmt!r} != {FORMAT!r}")
+    with _NpzCache(d) as npz_cache:
+        for key, meta in manifest["leaves"].items():
+            for e in meta["shards"]:
+                _read_shard_bytes(d, e, npz_cache, context=key)
 
 
 def list_steps(ckpt_dir: str) -> list:
     """All committed step numbers, ascending. A step counts only when
-    its ``manifest.json`` exists — ``*.tmp`` staging dirs (never renamed
-    in) and manifest-less torn directories are skipped, not tripped on."""
+    its ``manifest.json`` exists — ``*.tmp`` / ``*.tmp-pNN`` staging dirs
+    (never renamed in) and manifest-less torn directories are skipped,
+    not tripped on."""
     if not os.path.isdir(ckpt_dir):
         return []
     return sorted(
@@ -522,7 +1016,9 @@ def gc_checkpoints(ckpt_dir: str, keep_last_k: int) -> list:
     steps — EXCEPT the newest step that verifies, which is never deleted
     even when older than the retention window (if every retained step is
     torn/corrupt, the last restorable state must survive). Returns the
-    deleted step numbers."""
+    step numbers whose removal actually SUCCEEDED: a failed rmtree is
+    warned about (step + error) and excluded, so retention accounting
+    never claims bytes that are still on disk."""
     if keep_last_k < 1:
         raise ValueError(f"keep_last_k must be >= 1: {keep_last_k}")
     steps = list_steps(ckpt_dir)
@@ -540,8 +1036,19 @@ def gc_checkpoints(ckpt_dir: str, keep_last_k: int) -> list:
     for step in steps:
         if step in keep:
             continue
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{step:08d}"),
-                      ignore_errors=True)
+        path = os.path.join(ckpt_dir, f"step_{step:08d}")
+        try:
+            shutil.rmtree(path)
+        except OSError as e:
+            print(f"[ckpt] WARNING: retention gc failed to delete step "
+                  f"{step} ({path}): {e!r}; keeping it in the listing",
+                  flush=True)
+            continue
+        if os.path.isdir(path):         # belt-and-braces: verify removal
+            print(f"[ckpt] WARNING: retention gc left step {step} "
+                  f"({path}) on disk; keeping it in the listing",
+                  flush=True)
+            continue
         deleted.append(step)
     return deleted
 
@@ -557,21 +1064,51 @@ def _is_valid(ckpt_dir: str, step: int) -> bool:
 def checkpoint_size_report(ckpt_dir: str, step: int) -> dict:
     """Byte accounting from the manifest (no array loads): total logical
     bytes, total saved shard bytes (== logical iff no replica was written
-    twice — the no-hidden-all-gather invariant), and per-device owned
-    bytes (what each dp rank's process would write in a multi-host run)."""
+    twice — the no-hidden-all-gather invariant, enforced at merge time),
+    per-device owned bytes, and per-process owned bytes (what each host
+    writes in a multi-host run)."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _load_manifest(d)
     logical = saved = 0
     per_device: dict = {}
+    per_process: dict = {}
     for meta in manifest["leaves"].values():
         itemsize = _np_dtype(meta["dtype"]).itemsize
         logical += int(np.prod(meta["shape"])) * itemsize
         for e in meta["shards"]:
-            nbytes = int(np.prod([b - a for a, b in e["index"]])) * itemsize
+            nbytes = _range_count(e["index"]) * itemsize
             saved += nbytes
             per_device[e["device"]] = per_device.get(e["device"], 0) + nbytes
+            p = _entry_process(e)
+            per_process[p] = per_process.get(p, 0) + nbytes
     files = {name: os.path.getsize(os.path.join(d, name))
              for name in os.listdir(d)}
     return {"logical_bytes": logical, "saved_bytes": saved,
-            "per_device_bytes": per_device, "file_bytes": files}
+            "per_device_bytes": per_device,
+            "per_process_bytes": per_process, "file_bytes": files}
+
+
+def per_process_restore_bytes(ckpt_dir: str, step: int) -> dict:
+    """Per-process RESTORE bytes for a same-layout restore, from the
+    merged manifest alone (no array loads): a shard covering its whole
+    leaf is replicated — every process reads it — while a partial shard
+    is read by its owning process. The lazy-restore counterpart of
+    ``checkpoint_size_report``'s save-side accounting (the
+    ``--ckpt-sizes`` table column)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = _load_manifest(d)
+    processes = int(manifest.get("processes", 1))
+    out = {p: 0 for p in range(processes)}
+    for meta in manifest["leaves"].values():
+        itemsize = _np_dtype(meta["dtype"]).itemsize
+        logical = int(np.prod(meta["shape"]))
+        for e in meta["shards"]:
+            count = _range_count(e["index"])
+            nbytes = count * itemsize
+            if count == logical:        # replicated: every process reads it
+                for p in out:
+                    out[p] += nbytes
+            else:
+                p = _entry_process(e)
+                out[p] = out.get(p, 0) + nbytes
+    return out

@@ -248,16 +248,31 @@ class DistributedEngine:
         step falls back to the previous one (the auto-resume contract —
         a preempted run must never be wedged by its own torn last
         write). An explicit ``step`` restores exactly that step, with
-        verification errors propagating."""
-        from repro.checkpoint import restore_checkpoint, \
-            restore_latest_valid
+        verification errors propagating.
+
+        The restore is lazy (shard-overlap): only manifest shards that
+        intersect this host's partition of the target shardings are read
+        — the per-host byte accounting is printed after the restore."""
+        from repro.checkpoint import last_restore_stats, \
+            restore_checkpoint, restore_latest_valid
         if step is None:
             state, _ = restore_latest_valid(
                 ckpt_dir, self.abstract_state(),
                 shardings=self.state_shardings())
-            return state
-        return restore_checkpoint(ckpt_dir, step, self.abstract_state(),
-                                  shardings=self.state_shardings())
+        else:
+            state = restore_checkpoint(ckpt_dir, step,
+                                       self.abstract_state(),
+                                       shardings=self.state_shardings())
+        stats = last_restore_stats()
+        if stats is not None:
+            mib = 1024 * 1024
+            print(f"[ckpt] lazy restore: read "
+                  f"{stats.read_bytes / mib:.1f} MiB "
+                  f"({stats.entries_read}/{stats.entries_total} shards) "
+                  f"for a {stats.partition_bytes / mib:.1f} MiB local "
+                  f"partition of a {stats.logical_bytes / mib:.1f} MiB "
+                  f"logical state", flush=True)
+        return state
 
     def make_checkpointer(self):
         """Async double-buffered checkpointer configured from EngineConfig

@@ -27,14 +27,18 @@ accumulation per chunk), but not with --seq-parallel.
 --seed seeds both parameter init and the EngineConfig so distributed
 layouts are loss-trajectory comparable run-to-run.
 
-Checkpointing & resume (elastic, shard-local — repro.checkpoint): the loop
-trains a single ``TrainState`` pytree (params, opt state, step, data
-cursor, rng). ``--ckpt-dir D --ckpt-every N`` saves the full state every N
-steps via the async double-buffered saver (off the step critical path;
-``--ckpt-sync`` forces blocking saves) and once more at exit.
-``--resume`` restores the latest state from ``--ckpt-dir`` — into THIS
-run's dp×pp×ZeRO layout, whatever layout wrote it — and continues the
-exact loss trajectory: same schedule position (state.step), same optimizer
+Checkpointing & resume (elastic, shard-local — repro.checkpoint, format
+``repro-elastic-ckpt/v2``): the loop trains a single ``TrainState`` pytree
+(params, opt state, step, data cursor, rng). ``--ckpt-dir D
+--ckpt-every N`` saves the full state every N steps via the async
+double-buffered saver (off the step critical path; ``--ckpt-sync`` forces
+blocking saves) and once more at exit. On multi-host meshes every process
+stages its own shards + per-process manifest and process 0 merges and
+commits once (the merge-barrier protocol). ``--resume`` restores the
+latest state from ``--ckpt-dir`` — into THIS run's dp×pp×ZeRO layout,
+whatever layout wrote it, reading only the shards that overlap this
+host's partition (lazy shard-overlap restore) — and continues the exact
+loss trajectory: same schedule position (state.step), same optimizer
 moments, and the same data stream from the saved ``(epoch, batch_index)``
 cursor. Keep --steps/--batch/--accum/--seed identical across save and
 resume; the layout flags (--devices/--zero/--pp/--model-axis) may change

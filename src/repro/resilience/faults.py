@@ -16,8 +16,8 @@ none is installed (the production fast path):
                 ``checkpoint._write_snapshot``           (retried by the
                                                          backoff wrapper) or
                                                          PermanentFault
-  ckpt_corrupt  ``corrupt_committed`` after a            flips bytes in the
-                checkpoint commit                        committed shard file
+  ckpt_corrupt  ``corrupt_committed`` after the          flips bytes in every
+                merge-barrier checkpoint commit          committed shard file
                                                          (checksum verify
                                                          catches it; restore
                                                          falls back)
@@ -250,10 +250,11 @@ class FaultPlan:
         return out
 
     def corrupt_committed(self, ckpt_path: str, step: int):
-        """``ckpt_corrupt`` site: after the atomic-rename commit, flip
-        bytes inside the first shard file — a torn/bit-rotted checkpoint
-        that LOOKS complete (manifest present) but fails checksum
-        verification on restore."""
+        """``ckpt_corrupt`` site: after the merge-barrier commit, flip
+        bytes inside EVERY per-process shard file of the committed step —
+        a torn/bit-rotted checkpoint that LOOKS complete (merged manifest
+        present) but fails checksum verification on restore, regardless of
+        which process's shards a lazy restore happens to read."""
         with self._lock:
             flt = self._match("ckpt_corrupt", step)
             if flt is None:
@@ -263,11 +264,15 @@ class FaultPlan:
                             if n.startswith("shards-"))
             if not shards:
                 return
-            target = os.path.join(ckpt_path, shards[0])
-            with open(target, "r+b") as f:
-                f.seek(max(0, os.path.getsize(target) // 2))
-                f.write(b"\xde\xad\xbe\xef" * 4)
-            self._log(flt, f"corrupted {shards[0]}")
+            for name in shards:
+                target = os.path.join(ckpt_path, name)
+                size = os.path.getsize(target)
+                if size == 0:
+                    continue
+                with open(target, "r+b") as f:
+                    f.seek(max(0, size // 2))
+                    f.write(b"\xde\xad\xbe\xef" * 4)
+            self._log(flt, f"corrupted {', '.join(shards)}")
 
     def preempt_due(self, step: int) -> bool:
         """``preempt`` site: deliver SIGTERM to this process (the real
